@@ -1,0 +1,88 @@
+"""Paper §4 (async): EASGD vs BSP per-step overhead and tau sweep.
+
+The paper reports 42% lower async comm overhead than Platoon at tau=1 and a
+grid search over (alpha, tau). Here: per-step wall time of EASGD at several
+tau vs the BSP/ASA step, plus final-loss comparison on the synthetic LM.
+"""
+import json
+import os
+import subprocess
+import sys
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, time
+import jax, numpy as np
+from repro.configs import get_smoke_config
+from repro.core import (get_exchanger, init_easgd_state, init_train_state,
+                        make_bsp_step, make_easgd_step)
+from repro.data.synthetic import LMTokenSource
+from repro.models import build_model
+from repro.optim import constant, sgd_momentum
+
+cfg = get_smoke_config("llama3.2-1b").with_overrides(vocab_size=128)
+model = build_model(cfg)
+opt = sgd_momentum(weight_decay=0.0)
+mesh = jax.make_mesh((8,), ("data",))
+jax.set_mesh(mesh)
+src = LMTokenSource(cfg.vocab_size, 32)
+B = 32
+rows = []
+
+def timeit(fn, state, steps=6):
+    losses = []
+    state, m = fn(state, src.batch(B, 0), jax.random.key(0))
+    jax.block_until_ready(m)
+    t0 = time.perf_counter()
+    for i in range(steps):
+        state, m = fn(state, src.batch(B, i), jax.random.key(i))
+        losses.append(float(m["loss"]))
+    jax.block_until_ready(m)
+    return (time.perf_counter() - t0) / steps * 1e6, losses
+
+bsp = jax.jit(make_bsp_step(model, opt, get_exchanger("asa"),
+                            constant(0.02), mesh))
+us, losses = timeit(bsp, init_train_state(model, opt, jax.random.key(0)))
+rows.append({"name": "bsp_asa", "us": us, "final_loss": losses[-1]})
+base = us
+
+for tau in [1, 2, 4]:
+    for alpha in [0.5]:
+        estep = jax.jit(make_easgd_step(model, constant(0.02), mesh,
+                                        alpha=alpha, tau=tau))
+        st = init_easgd_state(model, opt, jax.random.key(0), 8)
+        us, losses = timeit(estep, st)
+                # NOTE: on this 1-core host all 8 virtual workers timeshare, so
+        # wall overhead mostly reflects the extra elastic-update math, not
+        # network cost; wire bytes are in EXPERIMENTS.md.
+        rows.append({"name": f"easgd_tau{tau}_a{alpha}", "us": us,
+                     "final_loss": losses[-1],
+                     "overhead_vs_bsp": us / base - 1.0})
+print("RESULTS_JSON:" + json.dumps(rows))
+"""
+
+
+def run():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=1800)
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-2000:])
+    rows = None
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULTS_JSON:"):
+            rows = json.loads(line[len("RESULTS_JSON:"):])
+    out = []
+    for r in rows:
+        derived = f"final_loss={r['final_loss']:.3f}"
+        if "overhead_vs_bsp" in r:
+            derived += f";overhead_vs_bsp={r['overhead_vs_bsp']:+.1%}"
+        out.append((f"easgd/{r['name']}", r["us"], derived))
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,50 @@
+"""Pallas kernel micro-bench (interpret mode on CPU — correctness-path
+timing only; compiled TPU timing requires hardware). Derived: relative cost
+vs the pure-jnp oracle."""
+import time
+
+
+def _time(fn, *args, reps=3):
+    import jax
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+
+    key = jax.random.key(0)
+    rows = []
+    k, n = 8, 1 << 16
+    chunks = jax.random.normal(key, (k, n)).astype(jnp.bfloat16)
+    us_k = _time(lambda x: ops.chunk_sum(x), chunks)
+    us_r = _time(jax.jit(ref.chunk_sum_ref), chunks)
+    rows.append(("kernels/chunk_sum_8x64k", us_k,
+                 f"ref_us={us_r:.1f};ratio={us_k / us_r:.1f}"))
+
+    x = jax.random.normal(key, (n,))
+    us_k = _time(lambda v: ops.quant_int8(v), x)
+    us_r = _time(jax.jit(ref.quant_int8_ref), x)
+    rows.append(("kernels/quant_int8_64k", us_k,
+                 f"ref_us={us_r:.1f};ratio={us_k / us_r:.1f}"))
+
+    p = jax.random.normal(key, (n,))
+    m = jnp.zeros((n,))
+    us_k = _time(lambda a, b, c: ops.fused_sgd(a, b, c, 0.1), p, x, m)
+    us_r = _time(jax.jit(lambda a, b, c: ref.fused_sgd_ref(a, b, c, 0.1)),
+                 p, x, m)
+    rows.append(("kernels/fused_sgd_64k", us_k,
+                 f"ref_us={us_r:.1f};ratio={us_k / us_r:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

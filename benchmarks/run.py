@@ -1,0 +1,35 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV:
+- bench_comm     -> Fig 3 / Table 3 (exchange strategies)
+- bench_scaling  -> Table 1 (speedup vs #workers)
+- bench_easgd    -> §4 async (EASGD overhead / tau)
+- bench_loading  -> §3.3 Alg 1 (parallel loading)
+- bench_kernels  -> kernel micro-bench
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_comm, bench_easgd, bench_kernels,
+                            bench_loading, bench_scaling)
+    modules = [("comm", bench_comm), ("scaling", bench_scaling),
+               ("easgd", bench_easgd), ("loading", bench_loading),
+               ("kernels", bench_kernels)]
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in modules:
+        try:
+            for row_name, us, derived in mod.run():
+                print(f"{row_name},{us:.1f},{derived}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failed.append(name)
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

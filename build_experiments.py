@@ -1,0 +1,263 @@
+"""Assemble EXPERIMENTS.md from dry-run/perf JSONs + hand-written analysis.
+
+    PYTHONPATH=src python build_experiments.py
+"""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+from repro.roofline.report import (dryrun_table, load_results,  # noqa: E402
+                                   roofline_table, _fmt_s, _fmt_b)
+
+
+def perf_rows():
+    rows = []
+    for p in sorted(glob.glob("experiments/perf/*.json")):
+        with open(p) as f:
+            r = json.load(f)
+        r["tag"] = os.path.basename(p)[:-5]
+        rows.append(r)
+    return rows
+
+
+def perf_table(rows, prefix: str) -> str:
+    lines = ["| variant | t_compute | t_memory | t_collective | dominant | "
+             "coll bytes/dev | Δdominant vs baseline |",
+             "|---|---|---|---|---|---|---|"]
+    rs = [r for r in rows if r["tag"].startswith(prefix) and r.get("ok")]
+    base = next((r for r in rs if r["tag"] == prefix), None)
+
+    def dom_val(r):
+        rl = r["roofline"]
+        return max(rl["t_compute_s"], rl["t_memory_s"], rl["t_collective_s"])
+
+    for r in rs:
+        rl = r["roofline"]
+        delta = ""
+        if base is not None:
+            delta = f"{dom_val(base) / max(dom_val(r), 1e-12):.2f}x better" \
+                if r is not base else "(baseline)"
+        name = r["tag"][len(prefix):].lstrip("_") or "baseline"
+        lines.append(
+            f"| {name} | {_fmt_s(rl['t_compute_s'])} | "
+            f"{_fmt_s(rl['t_memory_s'])} | {_fmt_s(rl['t_collective_s'])} | "
+            f"{rl['dominant']} | {_fmt_b(rl['coll_bytes'])} | {delta} |")
+    return "\n".join(lines)
+
+
+def bench_csv() -> str:
+    for path in ("bench_output.txt", "logs/bench_trial.csv"):
+        if os.path.exists(path):
+            with open(path) as f:
+                return f.read().strip()
+    return "(run `PYTHONPATH=src python -m benchmarks.run`)"
+
+
+HEADER = """# EXPERIMENTS — Theano-MPI on TPU v5e (JAX reproduction)
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
+Meshes: single pod (16 data x 16 model = 256 chips), multi-pod
+(2 pod x 16 x 16 = 512 chips). CPU-only container: all terms are derived
+from compiled artifacts (see Methodology), not wall clock.
+
+## Methodology
+
+- Every (arch x shape) is lowered AND compiled on the production mesh(es);
+  memory_analysis/cost_analysis/HLO text are recorded in
+  `experiments/dryrun/*.json` (deliverable (e)).
+- `cost_analysis()` is per-device, with `while` bodies costed once. The
+  single-pod roofline pass therefore compiles each combo at scan unroll=1
+  and unroll=2 and extrapolates `total = c1 + (L-1)(c2-c1)` (exact for the
+  equal-length scanned segments used by every assigned arch). Validated vs
+  a full unroll (llama3.2-1b train_4k): flops within 3%; the memory term
+  carries ~1.8x methodology uncertainty (cross-layer fusion).
+- Collective bytes: per-shard result sizes of all-gather / all-reduce(x2) /
+  reduce-scatter / all-to-all / collective-permute parsed from
+  `compiled.as_text()`; the (k-1)/k factor is dropped (<7% at k=16).
+- `t_memory` uses XLA "bytes accessed", an upper bound that counts
+  intermediates which real TPUs keep in VMEM after fusion — treat it as
+  pessimistic; `t_compute`/`t_collective` are tight.
+- MODEL/HLO = 6·N_active·D (train) or 2·N_active·D (decode/prefill) over
+  compiled flops: the "useful fraction" (remat recompute, dispatch overhead
+  and attention S² terms push it below 1).
+
+## §Paper-validation (the paper's own claims, reproduced)
+
+| Paper claim | Our result | Where |
+|---|---|---|
+| Table 2 parameter counts (AlexNet 60,965,224 / GoogLeNet 13,378,280 / VGG 138,357,544) | **exact match, all three** | `tests/test_models.py::test_paper_table2_param_counts` |
+| ASA == Allreduce semantics (Fig 2) | all strategies agree with the worker-mean to fp32 tolerance; fp16/int8 within wire-precision bounds | `tests/test_exchangers.py` (8-dev) |
+| Fig 3 / Table 3 on the paper's own models (8 workers) | wire bytes: AR == ASA (1.00x), asa16 = **2.00x**, asa8 = **4.00x** for AlexNet-61M / GoogLeNet-13.4M / VGG-138M gradient pytrees | benchmarks `comm/*` (CSV below) |
+| fp16 transfer + fp32 summation (§3.2) | `asa16` wire bytes = 0.5x AR; Pallas `chunk_sum` accumulates fp32 (beats fp16 accumulation in `test_chunk_sum_fp32_accumulation_beats_fp16`) | benchmarks `comm/*` |
+| ASA 3x faster than Allreduce (Fig 3) | **does not transfer to TPU/XLA** (expected): XLA's all-reduce is already a fused ring reduce-scatter+all-gather on ICI, so modeled AR bytes ≈ ASA bytes. The paper's win came from OpenMPI's host-staged CUDA Allreduce. The *decomposition insight* survives as ZeRO-1 (below) and the *precision* part transfers fully (asa16/asa8). | `experiments/perf/llama3.2*`, §Perf H3 |
+| Parallel loading hides IO (Alg 1) | Mechanically verified (`test_parallel_loader_overlaps`: prefetch runs ahead of the consumer). Wall-clock finding: **JAX's async dispatch already provides most of Alg 1's overlap for free** — a plain generator loop overlaps host IO with device compute because `step()` returns before the device finishes, so parallel~=sync on this host (both ~1.9 steps/s at 400ms simulated remote IO vs 1.99 local). The dedicated loader thread matters when IO exceeds a full step or preprocessing is GIL-heavy — the paper's Theano runtime had no async dispatch, hence their win. | benchmarks `loading/*` |
+| EASGD at tau>=1 converges; larger tau trades comm for convergence (§4) | EASGD center converges on synthetic LM; tau sweep in `examples/easgd_async.py`; per-step comm drops ~1/tau | benchmarks `easgd/*` |
+| BSP speedup vs k workers (Table 1) | modeled: exchange bytes per device are constant in k (ring), so scaling is compute-bound until the collective term dominates; measured CPU-host wall clock in benchmarks `scaling/*` (1-core host: see `efficiency_vs_serial`) | |
+
+Benchmark CSV (latest run). Note `comm/vggnet/FAILED`: the 138M-param
+pytree stacked 8x in fp32 plus XLA-CPU's O(k)-copy all-reduce exceeds this
+35 GB single-host simulation — a host limitation, not a code path failure
+(the same code passes the 61M AlexNet here, and VGG-sized buffers pass in
+the 256-way ShapeDtypeStruct sweep of §Perf H3 which allocates nothing):
+
+```
+{BENCH}
+```
+"""
+
+
+def main():
+    rows = load_results()
+    prows = perf_rows()
+    parts = [HEADER.replace("{BENCH}", bench_csv())]
+
+    parts.append("\n## §Dry-run (deliverable e)\n")
+    parts.append("Every (architecture x input shape) lowers and compiles on "
+                 "both production meshes. Failures would appear as FAIL "
+                 "rows.\n\n"
+                 "**Memory fit (v5e = 16 GB/chip).** The decode shapes and "
+                 "the small-arch train shapes fit; 25 of the 40 single-pod "
+                 "combos exceed 16 GB of XLA-reported temp+args — almost "
+                 "entirely the naive-attention S2 buffers at 32k (cut 10x+ "
+                 "by H1's blockwise attention, which is exactly why flash "
+                 "attention exists) and the remat-stored residuals of the "
+                 "train shapes (cut by the microbatch accumulation option "
+                 "in core/bsp.py, at 4 microbatches: /4). The XLA CPU "
+                 "backend also does not apply TPU-grade fusion to temp "
+                 "buffers, so these numbers are upper bounds. The lowering "
+                 "and collective schedules — what the dry-run certifies — "
+                 "are unaffected.\n")
+    parts.append("### Single pod (16x16 = 256 chips)\n")
+    parts.append(dryrun_table(rows, "16x16"))
+    parts.append("\n### Multi-pod (2x16x16 = 512 chips)\n")
+    parts.append(dryrun_table(rows, "2x16x16"))
+
+    parts.append("\n## §Roofline (single-pod, per device)\n")
+    parts.append(roofline_table(rows, "16x16"))
+    parts.append("""
+### Reading the table
+
+- **train_4k** is collective- or memory-bound everywhere: the BSP gradient
+  exchange (fp32, 2 x N bytes/device) plus per-layer TP collectives dominate
+  at TP=16 with only 16 sequences/device. Dense archs with clean head
+  sharding (minitron, llama3.2, mistral) sit at useful_ratio 0.58-0.81
+  (remat accounts for most of the gap: ~1.33x recompute).
+- **prefill_32k** is memory-bound under naive attention: the S² score
+  tensors dominate bytes (useful_ratio 0.02-0.10 on dense archs). Fixed by
+  blockwise attention in §Perf H1.
+- **decode** shapes are tiny on compute (1 token) and bound by
+  KV-cache reads (memory) or by resharding collectives where the sharding
+  fallback is awkward (llama3.2/minitron/mistral decode: kv_heads=8 < 16
+  forces head_dim sharding; chameleon/llama4: MoE+vocab gathers).
+- **Pathologies surfaced by the baseline** (and attacked in §Perf):
+  qwen prefill_32k reshards the full 32k² score tensor (20 heads don't
+  divide 16 -> GSPMD all-gathers scores), 215 TB/device; llama4-scout
+  prefill reshards MoE dispatch buffers, 524 TB/device.
+""")
+
+    parts.append("\n## §Perf — hypothesis -> change -> measure -> validate\n")
+    parts.append("Three pairs hillclimbed (worst roofline fraction, most "
+                 "collective-bound, most paper-representative); hypotheses "
+                 "were recorded before running the variants "
+                 "(`experiments/perf_hypotheses.md`).\n")
+
+    parts.append("\n### H1: qwen1.5-4b x prefill_32k (worst fraction, "
+                 "collective-bound)\n")
+    parts.append(perf_table(prows, "qwen1.5-4b__prefill_32k__single"))
+    parts.append("""
+**Hypothesis:** blockwise (flash-style) attention removes the S² HBM traffic
+-> t_memory drops >=5x. **Result: partially confirmed, and better than
+predicted on a different term.** The dominant cost was actually the GSPMD
+*reshard of the score tensor* (qwen's 20 heads don't divide the 16-way model
+axis, so scores were all-gathered): blockwise attention eliminates the
+materialized score tensor entirely, cutting the collective term **224x**
+(4314s -> 19.2s) and shifting the bottleneck to memory. The reported
+t_memory barely moves because XLA "bytes accessed" still counts each
+per-block score tile; on hardware those tiles are VMEM-resident (flash
+attention's raison d'etre), so the true memory term is far lower — bounded
+below by the KV+activation streams (~40s). block=8192 is worse than
+block=2048 as predicted (larger working set). Lesson: at TP boundaries,
+*sharding-induced* collectives can dwarf the textbook memory analysis; the
+napkin math missed it because it assumed scores stay local.
+""")
+
+    parts.append("\n### H2: hymba-1.5b x train_4k (most collective-bound "
+                 "BSP arch)\n")
+    parts.append(perf_table(prows, "hymba-1.5b__train_4k__single"))
+    parts.append("""
+*(Parser note: the `noseq`, `asa16`, `asa16__noseq` rows were measured with
+an earlier collective parser that missed tuple-result all-to-alls; their
+apparent 1.48x delta vs baseline is that artifact, not a real change —
+apples-to-apples against the old baseline (83.18s) they were within 0.2%.
+`baseline`, `repattn`, `asa16__repattn` use the fixed parser.)*
+
+**Hypothesis 1 (refuted):** the sequence-parallel residual constraint causes
+the reshards -> `--no-seq-shard` changed **nothing** (83.18s vs 83.18s,
+old parser both sides). **Hypothesis 2 (mostly refuted):** fp16 exchange
+-> asa16 moved t_coll <0.2% (the gradient exchange is a tiny share of the
+reshard traffic). **Hypothesis 3 (confirmed, 11x):** with d_model=1600,
+TP=16 leaves only 100 features (and 5 kv heads force head_dim sharding);
+GSPMD reshards the attention AND SSD activations every layer (all-to-all +
+all-gather chains — 6.1 TB/device/step!). Replicating the attention/SSM
+parameters (`--replicate-attn`, TP kept on FFN/embed/head) removes them:
+**t_coll 122.9s -> 10.9s (11x)**; asa16 on top shaves the now-visible
+exchange share (546 -> 537 GB). t_compute rises 0.48 -> 1.64s (mixer
+compute now replicated) — a good trade: the dominant term drops
+122.9 -> 66.1 (memory), **1.86x better end-to-end**, and the remaining
+memory term is the naive-attention S² artifact addressed by H1's blockwise
+attention. Lesson: for small-d hybrid archs, tensor-parallelism of the
+mixers is counterproductive; shard only the FFN.
+""")
+
+    parts.append("\n### H3: llama3.2-1b x train_4k (paper-representative: "
+                 "exchanger sweep)\n")
+    parts.append(perf_table(prows, "llama3.2-1b__train_4k__single"))
+    parts.append("""
+**Hypothesis (confirmed, including the predicted refutation-of-transfer):**
+
+1. *Full train step at TP=16* (table above): exchanger choice moves total
+   collective bytes by <7% — TP activation collectives (~180 GB/device)
+   dwarf the ~15 GB gradient exchange. The paper's Fig-3 regime (pure DP)
+   must be isolated to see the effect:
+2. *Exchange-only, pure-DP 256-way mesh, llama3.2-1b-sized gradients*
+   (`experiments/perf/dp256_exchange_sweep.json`), per-device wire bytes:
+
+   | strategy | GB/device | vs AR |
+   |---|---|---|
+   | ar (psum)          | 9.89 | 1.00x |
+   | **asa** (paper C2) | **9.89** | **1.00x — byte-identical** |
+   | asa16 (paper C3)   | 4.94 | **2.0x** |
+   | asa8 (beyond paper)| 2.47 | **4.0x** |
+   | hier (multi-pod)   | 9.89 | 1.00x (its win is DCN-vs-ICI placement, not bytes) |
+
+   The paper's 3x ASA-vs-Allreduce speedup **does not transfer to TPU/XLA**:
+   XLA's all-reduce is already a fused ring reduce-scatter+all-gather, so
+   the Alltoall-sum-Allgather decomposition is byte- (and schedule-)
+   neutral. It was an artifact of OpenMPI 1.8.7 staging CUDA all-reduce
+   through host memory. What *does* transfer is the half-precision-transfer
+   /full-precision-sum idea (exactly 2x; int8 pushes to 4x) — and the
+   decomposition itself resurfaces as ZeRO-1 (grads reduce-scattered, 1/k
+   optimizer shards, params all-gathered), which this framework uses for
+   the >=34B architectures where replicated-DP cannot fit.
+3. *zero1 on this small model* (beyond-paper variant, table above):
+   **2.7x WORSE** on collectives (10.4s vs 3.9s) — FSDP re-gathers
+   parameters every layer fwd+bwd. ZeRO-1 is a memory play, not a comm
+   play; at 1.2B params (replicated fits easily) it strictly loses.
+   Confirms the FSDP_THRESHOLD policy in `launch/dryrun.py`.
+4. *Iteration on the exchanger itself*: the first asa16 measurement on the
+   pure-DP mesh showed only 1.1x (not 2x) — stacked-layer leaves with
+   dim0 < k fell back to fp32 psum. Flattening such leaves before chunking
+   (`exchanger.py`) recovered the full 2.0x. hypothesis -> measure ->
+   fix -> re-measure, kept in the code.
+""")
+
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write("\n".join(parts))
+    print("wrote EXPERIMENTS.md",
+          f"({len(rows)} dryrun rows, {len(prows)} perf rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Checkpointing: pytree <-> sharded .npz directory.
+
+Flat key = '/'-joined tree path. Restore rebuilds onto the target sharding
+(device_put against the existing state's shardings), so checkpoints travel
+across mesh configurations.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = {}
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(f"{prefix}/{k}" if prefix else str(k), v)
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(f"{prefix}/{i}", v)
+        else:
+            flat[prefix] = node
+
+    walk("", tree)
+    return flat
+
+
+def save_checkpoint(path: str, state, step: int | None = None):
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(state)
+
+    def to_np(v):
+        a = np.asarray(v) if not hasattr(v, "dtype") or v.dtype !=             jax.numpy.bfloat16 else np.asarray(v, np.float32)
+        return a
+    arrays = {k: to_np(v) for k, v in flat.items()}
+    np.savez(os.path.join(path, "state.npz"), **arrays)
+    meta = {"step": int(step) if step is not None else 0,
+            "keys": sorted(arrays.keys())}
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump(meta, f)
+
+
+def restore_checkpoint(path: str, state_like):
+    """Restore into the structure (and shardings/dtypes) of ``state_like``."""
+    data = np.load(os.path.join(path, "state.npz"))
+    flat_like = _flatten(state_like)
+    missing = set(flat_like) - set(data.files)
+    extra = set(data.files) - set(flat_like)
+    if missing or extra:
+        raise ValueError(f"checkpoint mismatch: missing={sorted(missing)[:5]} "
+                         f"extra={sorted(extra)[:5]}")
+
+    leaves, treedef = jax.tree.flatten(state_like)
+    flat_keys = list(_flatten(state_like).keys())
+    # _flatten and tree.flatten enumerate dicts in the same (insertion) order
+    # only if keys are sorted consistently; rebuild by path instead.
+    restored_flat = {}
+    for k, like in flat_like.items():
+        arr = data[k]
+        target_dtype = like.dtype
+        a = jax.numpy.asarray(arr).astype(target_dtype)
+        if hasattr(like, "sharding") and like.sharding is not None:
+            try:
+                a = jax.device_put(a, like.sharding)
+            except Exception:
+                pass
+        restored_flat[k] = a
+
+    def rebuild(prefix, node):
+        if isinstance(node, dict):
+            return {k: rebuild(f"{prefix}/{k}" if prefix else str(k), v)
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            seq = [rebuild(f"{prefix}/{i}", v) for i, v in enumerate(node)]
+            return type(node)(seq) if isinstance(node, tuple) else seq
+        return restored_flat[prefix]
+
+    return rebuild("", state_like)
+
+
+def latest_step(path: str) -> int:
+    with open(os.path.join(path, "meta.json")) as f:
+        return json.load(f)["step"]

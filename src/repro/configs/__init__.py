@@ -1,0 +1,4 @@
+from repro.configs.base import (ArchConfig, AttentionConfig, MoEConfig,
+                                SSMConfig, InputShape, INPUT_SHAPES, reduced)
+from repro.configs.registry import (get_config, get_smoke_config, get_shape,
+                                    list_archs, ASSIGNED_ARCHS, PAPER_ARCHS)

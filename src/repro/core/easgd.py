@@ -1,0 +1,89 @@
+"""Elastic Averaging SGD (paper §4; Zhang et al. 2015).
+
+Theano-MPI re-implements Platoon's EASGD over CUDA-aware MPI SendRecv. The
+TPU/SPMD adaptation keeps per-worker parameter replicas as a leading axis
+sharded over the data axis; the elastic attraction to the replicated center
+runs every ``tau`` steps (the averaging period) as a psum — a synchronous
+clock emulation of bounded-staleness asynchrony (the paper itself equates
+larger tau with larger effective batch).
+
+Worker update :  x_i <- x_i - eta*g_i - alpha*(x_i - center)   (every tau)
+Center update :  center <- center + alpha * sum_i (x_i - center)
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.registry import Model
+from repro.optim.optimizers import Optimizer
+
+
+def init_easgd_state(model: Model, optimizer: Optimizer, key, num_workers: int):
+    params = model.init(key)
+    stack = lambda p: jnp.broadcast_to(p[None], (num_workers, *p.shape))
+    workers = jax.tree.map(stack, params)
+    return {
+        "workers": workers,
+        "opt": jax.tree.map(stack, optimizer.init(params)["m"]),
+        "center": params,
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_easgd_step(model: Model, lr_fn: Callable, mesh,
+                    alpha: float = 0.5, tau: int = 1,
+                    momentum: float = 0.9, data_axis: str = "data"):
+    """Returns ``step(state, batch, rng) -> (state, metrics)``."""
+
+    def per_shard(state, batch, rng):
+        rng = jax.random.fold_in(rng, jax.lax.axis_index(data_axis))
+        w = jax.tree.map(lambda v: v[0], state["workers"])
+        m = jax.tree.map(lambda v: v[0], state["opt"])
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(w, batch, rng)
+        lr = lr_fn(state["step"])
+
+        # local momentum-SGD step
+        def upd(p, g, mm):
+            mm_new = momentum * mm + g.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr * mm_new).astype(p.dtype),
+                    mm_new)
+        out = jax.tree.map(upd, w, grads, m)
+        is_t = lambda t: isinstance(t, tuple)
+        w = jax.tree.map(lambda t: t[0], out, is_leaf=is_t)
+        m = jax.tree.map(lambda t: t[1], out, is_leaf=is_t)
+
+        # elastic averaging every tau steps
+        do_avg = ((state["step"] + 1) % tau == 0).astype(jnp.float32)
+
+        def elastic(wi, c):
+            delta = alpha * (wi.astype(jnp.float32) - c.astype(jnp.float32))
+            wi_new = (wi.astype(jnp.float32) - do_avg * delta).astype(wi.dtype)
+            c_new = (c.astype(jnp.float32)
+                     + do_avg * jax.lax.psum(delta, data_axis)).astype(c.dtype)
+            return wi_new, c_new
+        out = jax.tree.map(elastic, w, state["center"])
+        w = jax.tree.map(lambda t: t[0], out, is_leaf=is_t)
+        center = jax.tree.map(lambda t: t[1], out, is_leaf=is_t)
+
+        metrics = jax.tree.map(lambda v: jax.lax.pmean(v, data_axis), metrics)
+        new_state = {
+            "workers": jax.tree.map(lambda v: v[None], w),
+            "opt": jax.tree.map(lambda v: v[None], m),
+            "center": center,
+            "step": state["step"] + 1,
+        }
+        return new_state, metrics
+
+    state_spec = {"workers": P(data_axis), "opt": P(data_axis),
+                  "center": P(), "step": P()}
+    return jax.shard_map(
+        per_shard, mesh=mesh,
+        in_specs=(state_spec, P(data_axis), P()),
+        out_specs=(state_spec, P()),
+        axis_names=frozenset({data_axis}),
+        check_vma=False)

@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: the paper's ASA summation kernel.
+
+After the Alltoall leg, each rank holds ``k`` low-precision chunks that must
+be summed at full precision (paper §3.2: "summation kernels ... executed in
+parallel on GPUs", "transfer at half precision while summing at full").
+
+Kernel contract:  (k, n) chunks (any float dtype)  ->  (n,) float32 sum.
+
+TPU adaptation: grid over ``n`` in VMEM-sized blocks; the whole ``k`` axis of
+one block is resident in VMEM (k is the data-parallel degree, <= 32, so a
+(k, block_n) tile of bf16 at block_n=2048 is ~128KB — comfortably in the
+~16MB VMEM). Accumulation is fp32 inside the kernel regardless of the input
+dtype, matching the paper's full-precision-summation requirement. The lane
+dimension (block_n) is a multiple of 128 for VPU alignment.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_N = 2048
+
+
+def _chunk_sum_kernel(x_ref, o_ref):
+    # x_ref: (k, block_n) in VMEM; o_ref: (block_n,) fp32
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.sum(x, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def chunk_sum(chunks, *, block_n: int = DEFAULT_BLOCK_N,
+              interpret: bool = True):
+    """Sum ``chunks`` (k, n) over axis 0 with fp32 accumulation -> (n,) f32.
+
+    ``interpret=True`` runs the kernel body in the Pallas interpreter (CPU
+    container); on TPU pass ``interpret=False``.
+    """
+    k, n = chunks.shape
+    pad = (-n) % block_n
+    if pad:
+        chunks = jnp.pad(chunks, ((0, 0), (0, pad)))
+    npad = n + pad
+    grid = (npad // block_n,)
+    out = pl.pallas_call(
+        _chunk_sum_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((k, block_n), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((npad,), jnp.float32),
+        interpret=interpret,
+    )(chunks)
+    return out[:n]

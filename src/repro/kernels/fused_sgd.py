@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: fused momentum-SGD update.
+
+The parameter update after exchange touches p, g, m once each; unfused XLA
+may materialize intermediates in HBM. This kernel streams (p, g, m) blocks
+through VMEM and writes (p', m') in a single pass:
+
+    m' = mu * m + g
+    p' = p - lr * (g + mu * m')    (nesterov)
+       = p - lr * m'               (classic)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_N = 4096
+
+
+def _fused_sgd_kernel(p_ref, g_ref, m_ref, lr_ref, po_ref, mo_ref, *,
+                      momentum: float, nesterov: bool):
+    p = p_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    lr = lr_ref[0]
+    m_new = momentum * m + g
+    step = g + momentum * m_new if nesterov else m_new
+    po_ref[...] = p - lr * step
+    mo_ref[...] = m_new
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("momentum", "nesterov", "block_n",
+                                    "interpret"))
+def fused_sgd(p, g, m, lr, *, momentum: float = 0.9, nesterov: bool = False,
+              block_n: int = DEFAULT_BLOCK_N, interpret: bool = True):
+    """Flat fused update. p/g/m: (n,) -> (p', m') fp32."""
+    (n,) = p.shape
+    pad = (-n) % block_n
+    if pad:
+        p = jnp.pad(p, (0, pad))
+        g = jnp.pad(g, (0, pad))
+        m = jnp.pad(m, (0, pad))
+    lr_arr = jnp.asarray([lr], jnp.float32)
+    kern = functools.partial(_fused_sgd_kernel, momentum=momentum,
+                             nesterov=nesterov)
+    po, mo = pl.pallas_call(
+        kern,
+        grid=(p.shape[0] // block_n,),
+        in_specs=[pl.BlockSpec((block_n,), lambda i: (i,)),
+                  pl.BlockSpec((block_n,), lambda i: (i,)),
+                  pl.BlockSpec((block_n,), lambda i: (i,)),
+                  pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=[pl.BlockSpec((block_n,), lambda i: (i,)),
+                   pl.BlockSpec((block_n,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(p.shape, jnp.float32)],
+        interpret=interpret,
+    )(p, g, m, lr_arr)
+    return po[:n], mo[:n]

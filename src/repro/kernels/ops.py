@@ -1,0 +1,52 @@
+"""Jitted public wrappers over the Pallas kernels.
+
+On this CPU container the kernels execute in ``interpret=True`` mode (Pallas
+interpreter); ``REPRO_PALLAS_COMPILED=1`` switches to compiled mode on real
+TPU. The wrappers match the exchanger/optimizer plug-in contracts.
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from repro.kernels import chunk_sum as _cs
+from repro.kernels import fused_sgd as _fs
+from repro.kernels import quantize as _q
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILED", "0") != "1"
+
+
+def chunk_sum(chunks, block_n: int = _cs.DEFAULT_BLOCK_N):
+    """Exchanger ``sum_fn`` plug-in: (k, ...) -> (...) fp32.
+
+    Flattens trailing dims to the kernel's (k, n) contract."""
+    k = chunks.shape[0]
+    flat = chunks.reshape(k, -1)
+    out = _cs.chunk_sum(flat, block_n=block_n, interpret=INTERPRET)
+    return out.reshape(chunks.shape[1:])
+
+
+def quant_fp16(x):
+    return _q.quant_fp16(x.reshape(-1), interpret=INTERPRET).reshape(x.shape)
+
+
+def dequant_fp16(x):
+    return _q.dequant_fp16(x.reshape(-1), interpret=INTERPRET).reshape(x.shape)
+
+
+def quant_int8(x, block_n: int = _q.DEFAULT_BLOCK_N):
+    return _q.quant_int8(x.reshape(-1), block_n=block_n, interpret=INTERPRET)
+
+
+def dequant_int8(q, scales, block_n: int = _q.DEFAULT_BLOCK_N):
+    return _q.dequant_int8(q, scales, block_n=block_n, interpret=INTERPRET)
+
+
+def fused_sgd(p, g, m, lr, momentum=0.9, nesterov=False):
+    """Optimizer plug-in: nd-arrays, fp32 out, original shape preserved."""
+    shape = p.shape
+    po, mo = _fs.fused_sgd(p.reshape(-1), g.reshape(-1), m.reshape(-1), lr,
+                           momentum=float(momentum), nesterov=bool(nesterov),
+                           interpret=INTERPRET)
+    return po.reshape(shape), mo.reshape(shape)

@@ -1,0 +1,113 @@
+"""Pallas TPU kernels for low-precision exchange (paper §3.2 fp16; int8 is
+the beyond-paper extension).
+
+- ``quant_fp16`` / ``dequant_fp16``: cast kernels (the fp16 wire format).
+- ``quant_int8`` / ``dequant_int8``: blockwise-absmax int8. Each block of
+  ``block_n`` values gets one fp32 scale (scale = absmax/127) — tiling that
+  maps 1:1 onto the VMEM block so the reduction never leaves the tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_N = 2048
+
+
+# ---------------------------------------------------------------------------
+# fp16 cast kernels
+# ---------------------------------------------------------------------------
+
+def _cast_kernel(dtype):
+    def kern(x_ref, o_ref):
+        o_ref[...] = x_ref[...].astype(dtype)
+    return kern
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def quant_fp16(x, *, block_n: int = DEFAULT_BLOCK_N, interpret: bool = True):
+    (n,) = x.shape
+    pad = (-n) % block_n
+    xp = jnp.pad(x, (0, pad)) if pad else x
+    out = pl.pallas_call(
+        _cast_kernel(jnp.float16),
+        grid=(xp.shape[0] // block_n,),
+        in_specs=[pl.BlockSpec((block_n,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, jnp.float16),
+        interpret=interpret,
+    )(xp)
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def dequant_fp16(x, *, block_n: int = DEFAULT_BLOCK_N, interpret: bool = True):
+    (n,) = x.shape
+    pad = (-n) % block_n
+    xp = jnp.pad(x, (0, pad)) if pad else x
+    out = pl.pallas_call(
+        _cast_kernel(jnp.float32),
+        grid=(xp.shape[0] // block_n,),
+        in_specs=[pl.BlockSpec((block_n,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, jnp.float32),
+        interpret=interpret,
+    )(xp)
+    return out[:n]
+
+
+# ---------------------------------------------------------------------------
+# int8 blockwise kernels
+# ---------------------------------------------------------------------------
+
+def _quant_int8_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    s_ref[...] = jnp.full(s_ref.shape, scale, jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def quant_int8(x, *, block_n: int = DEFAULT_BLOCK_N, interpret: bool = True):
+    """x: (n,) float -> (q: (n,) int8, scales: (n_blocks,) fp32)."""
+    (n,) = x.shape
+    pad = (-n) % block_n
+    xp = jnp.pad(x, (0, pad)) if pad else x
+    nb = xp.shape[0] // block_n
+    q, s = pl.pallas_call(
+        _quant_int8_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block_n,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((block_n,), lambda i: (i,)),
+                   pl.BlockSpec((1,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct(xp.shape, jnp.int8),
+                   jax.ShapeDtypeStruct((nb,), jnp.float32)],
+        interpret=interpret,
+    )(xp)
+    return q[:n], s
+
+
+def _dequant_int8_kernel(q_ref, s_ref, o_ref):
+    o_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def dequant_int8(q, scales, *, block_n: int = DEFAULT_BLOCK_N,
+                 interpret: bool = True):
+    (n,) = q.shape
+    pad = (-n) % block_n
+    qp = jnp.pad(q, (0, pad)) if pad else q
+    out = pl.pallas_call(
+        _dequant_int8_kernel,
+        grid=(qp.shape[0] // block_n,),
+        in_specs=[pl.BlockSpec((block_n,), lambda i: (i,)),
+                  pl.BlockSpec((1,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(qp.shape, jnp.float32),
+        interpret=interpret,
+    )(qp, scales)
+    return out[:n]

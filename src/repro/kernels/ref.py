@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose-tested in
+tests/test_kernels.py and used as the CPU fallback path)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def chunk_sum_ref(chunks):
+    """(k, n) -> (n,) fp32 sum."""
+    return jnp.sum(chunks.astype(jnp.float32), axis=0)
+
+
+def quant_fp16_ref(x):
+    return x.astype(jnp.float16)
+
+
+def dequant_fp16_ref(x):
+    return x.astype(jnp.float32)
+
+
+def quant_int8_ref(x, block_n: int = 2048):
+    (n,) = x.shape
+    pad = (-n) % block_n
+    xp = jnp.pad(x, (0, pad)) if pad else x
+    blocks = xp.reshape(-1, block_n).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(-1)[:n], scale
+
+
+def dequant_int8_ref(q, scales, block_n: int = 2048):
+    (n,) = q.shape
+    pad = (-n) % block_n
+    qp = jnp.pad(q, (0, pad)) if pad else q
+    blocks = qp.reshape(-1, block_n).astype(jnp.float32)
+    out = blocks * scales[:, None]
+    return out.reshape(-1)[:n]
+
+
+def fused_sgd_ref(p, g, m, lr, momentum: float = 0.9, nesterov: bool = False):
+    p = p.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+    m = m.astype(jnp.float32)
+    m_new = momentum * m + g
+    step = g + momentum * m_new if nesterov else m_new
+    return p - lr * step, m_new

@@ -1,0 +1,30 @@
+"""Production mesh construction (TPU v5e target).
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod:  2 pods x 256 chips as (pod=2, data=16, model=16).
+
+A FUNCTION (not module-level constant) so importing never touches jax device
+state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(num_devices: int | None = None, axes=("data",)):
+    """Small CPU-device mesh for tests/examples (paper-scale: 8 workers)."""
+    n = num_devices or len(jax.devices())
+    if len(axes) == 1:
+        return jax.make_mesh((n,), axes)
+    # split roughly evenly
+    import math
+    a = int(math.sqrt(n))
+    while n % a:
+        a -= 1
+    return jax.make_mesh((n // a, a), axes)

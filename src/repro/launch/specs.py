@@ -1,0 +1,65 @@
+"""``input_specs()``: ShapeDtypeStruct stand-ins for every model input at
+every (arch x input-shape), plus abstract state/cache construction — no
+device allocation (dry-run contract).
+
+Modality frontends are STUBS per the assignment: VLM image tokens arrive as
+precomputed patch/VQ embeddings, audio as precomputed frame embeddings.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models.registry import Model
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "conv":
+        return {"images": sds((B, cfg.image_size, cfg.image_size, 3),
+                              jnp.float32),
+                "labels": sds((B,), jnp.int32)}
+    if cfg.family == "encdec":
+        return {"frames": sds((B, cfg.encoder_seq_len, cfg.d_model),
+                              jnp.float32),
+                "tokens": sds((B, S), jnp.int32),
+                "labels": sds((B, S), jnp.int32)}
+    batch = {}
+    n_text = S
+    if cfg.modality == "vlm":
+        n_img = min(cfg.num_image_tokens, S // 2)
+        n_text = S - n_img
+        batch["image_embeds"] = sds((B, n_img, cfg.d_model), jnp.float32)
+    batch["tokens"] = sds((B, n_text), jnp.int32)
+    batch["labels"] = sds((B, n_text), jnp.int32)
+    return batch
+
+
+def decode_batch_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    return {"tokens": sds((shape.global_batch, 1), jnp.int32)}
+
+
+def abstract_params(model: Model, key=None):
+    return jax.eval_shape(model.init, jax.random.key(0))
+
+
+def abstract_state(model: Model, optimizer):
+    params = abstract_params(model)
+    return {
+        "params": params,
+        "opt": jax.eval_shape(optimizer.init, params),
+        "step": sds((), jnp.int32),
+    }
+
+
+def abstract_cache(model: Model, cfg: ArchConfig, shape: InputShape):
+    return jax.eval_shape(
+        functools.partial(model.init_cache, shape.global_batch,
+                          shape.seq_len))

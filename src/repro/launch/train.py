@@ -1,0 +1,76 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+        --smoke --steps 50 --exchanger asa --scheme subgd
+
+Runs the reduced (smoke) variant by default on the host CPU devices; the
+full config is exercised through the dry-run (-m repro.launch.dryrun).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.data.synthetic import LMTokenSource, ImageSource
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model
+from repro.optim import sgd_momentum, adamw, warmup_cosine, constant
+from repro.train.loop import train
+
+
+def synthetic_batches(cfg, batch_size: int, steps: int, seq_len: int = 128):
+    if cfg.family == "conv":
+        src = ImageSource(cfg.image_size, cfg.num_classes)
+        for i in range(steps):
+            yield src.batch(batch_size, i)
+    else:
+        src = LMTokenSource(cfg.vocab_size, seq_len)
+        for i in range(steps):
+            b = src.batch(batch_size, i)
+            if cfg.family == "encdec":
+                b["frames"] = np.random.default_rng(i).normal(
+                    0, 1, (batch_size, cfg.encoder_seq_len,
+                           cfg.d_model)).astype(np.float32)
+            if cfg.modality == "vlm":
+                b["image_embeds"] = np.zeros(
+                    (batch_size, cfg.num_image_tokens, cfg.d_model),
+                    np.float32)
+            yield b
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=0.01)
+    ap.add_argument("--optimizer", default="sgd", choices=["sgd", "adamw"])
+    ap.add_argument("--exchanger", default="asa")
+    ap.add_argument("--scheme", default="subgd", choices=["subgd", "awagd"])
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    mesh = make_host_mesh()
+    jax.set_mesh(mesh)
+    opt = (sgd_momentum(weight_decay=0.0) if args.optimizer == "sgd"
+           else adamw())
+    lr_fn = warmup_cosine(args.lr, 10, args.steps)
+    batches = synthetic_batches(cfg, args.batch, args.steps, args.seq)
+    _, report = train(model, opt, lr_fn, mesh, batches,
+                      exchanger=args.exchanger, scheme=args.scheme,
+                      num_steps=args.steps, ckpt_path=args.ckpt)
+    print(f"done: {report.steps} steps, "
+          f"{report.examples_per_s:.1f} ex/s, "
+          f"loss {report.losses[0]:.4f} -> {report.losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

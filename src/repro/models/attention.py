@@ -1,0 +1,322 @@
+"""Attention: GQA (+QKV bias, qk-norm, sliding window) and DeepSeek MLA.
+
+Train path computes full (windowed-)causal attention; decode path attends one
+query against a KV cache (GQA caches k/v; MLA caches the 512-d latent + the
+shared rope key and uses the absorbed-matmul trick, so the cache is 576
+floats/token as in the paper).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, AttentionConfig
+from repro.models.common import (apply_rope, dense_init, head_rms_norm)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg: ArchConfig, a: AttentionConfig, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, (a.num_heads, a.head_dim), dtype),
+        "wk": dense_init(ks[1], d, (a.num_kv_heads, a.head_dim), dtype),
+        "wv": dense_init(ks[2], d, (a.num_kv_heads, a.head_dim), dtype),
+        "wo": dense_init(ks[3], a.num_heads * a.head_dim, (d,), dtype),
+    }
+    if a.qkv_bias:
+        p["bq"] = jnp.zeros((a.num_heads, a.head_dim), dtype)
+        p["bk"] = jnp.zeros((a.num_kv_heads, a.head_dim), dtype)
+        p["bv"] = jnp.zeros((a.num_kv_heads, a.head_dim), dtype)
+    return p
+
+
+def init_mla(key, cfg: ArchConfig, a: AttentionConfig, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    qd = a.qk_nope_dim + a.qk_rope_dim
+    return {
+        "wq": dense_init(ks[0], d, (a.num_heads, qd), dtype),
+        "wdkv": dense_init(ks[1], d, (a.kv_lora_rank,), dtype),
+        "wkr": dense_init(ks[2], d, (a.qk_rope_dim,), dtype),
+        # up-projections from the latent
+        "wuk": dense_init(ks[3], a.kv_lora_rank,
+                          (a.num_heads, a.qk_nope_dim), dtype),
+        "wuv": dense_init(ks[4], a.kv_lora_rank,
+                          (a.num_heads, a.v_head_dim), dtype),
+        "wo": dense_init(jax.random.fold_in(key, 7),
+                         a.num_heads * a.v_head_dim, (d,), dtype),
+    }
+
+
+def init_attention(key, cfg: ArchConfig, dtype):
+    a = cfg.attention
+    assert a is not None
+    if a.kv_lora_rank:
+        return init_mla(key, cfg, a, dtype)
+    return init_gqa(key, cfg, a, dtype)
+
+
+# ---------------------------------------------------------------------------
+# masking
+# ---------------------------------------------------------------------------
+
+def _is_static(window) -> bool:
+    return isinstance(window, int)
+
+
+def causal_window_mask(q_pos, k_pos, window):
+    """(S_q, S_k) boolean mask. window<=0 => plain causal.
+
+    ``window`` may be a python int (static) or a traced scalar (per-layer,
+    used by hybrid archs inside layer scans)."""
+    keep = k_pos[None, :] <= q_pos[:, None]
+    dist = q_pos[:, None] - k_pos[None, :]
+    if _is_static(window):
+        if window > 0:
+            keep &= dist < window
+    else:
+        keep &= (window <= 0) | (dist < window)
+    return keep
+
+
+def decode_keep(k_pos, pos, window):
+    """(S_k,) mask for a single query at position ``pos``."""
+    keep = k_pos <= pos
+    dist = pos - k_pos
+    if _is_static(window):
+        if window > 0:
+            keep &= dist < window
+    else:
+        keep &= (window <= 0) | (dist < window)
+    return keep
+
+
+def _masked_softmax(scores, keep):
+    scores = jnp.where(keep, scores, NEG_INF)
+    return jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def _project_qkv(p, x, a: AttentionConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if a.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return q, k, v
+
+
+def gqa_attend(q, k, v, keep, a: AttentionConfig):
+    """q:(B,Sq,H,hd) k,v:(B,Sk,KV,hd), keep:(Sq,Sk) or (B,Sq,Sk)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q = q.reshape(B, Sq, KV, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k) / jnp.sqrt(hd).astype(q.dtype)
+    if keep.ndim == 2:
+        keep_b = keep[None, None, None]
+    else:
+        keep_b = keep[:, None, None]
+    w = _masked_softmax(scores, keep_b).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def gqa_attend_blockwise(q, k, v, q_pos, k_pos, window, a: AttentionConfig,
+                         block: int = 1024):
+    """Flash-style attention: lax.scan over KV blocks with an online
+    softmax, so the (Sq, Sk) score matrix is never materialized in HBM —
+    the per-step working set is (Sq, block). Beyond-paper optimization for
+    the memory-bound prefill/train shapes (see EXPERIMENTS.md §Perf).
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    Sk = k.shape[1]
+    pad = (-Sk) % block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=10 ** 9)
+    nb = (Sk + pad) // block
+    qg = q.reshape(B, Sq, KV, G, hd)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    kb = k.reshape(B, nb, block, KV, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, block, KV, hd).transpose(1, 0, 2, 3, 4)
+    pb = k_pos.reshape(nb, block)
+
+    def step(carry, inp):
+        m, l, acc = carry                          # (B,KV,G,Sq), ., (+hd)
+        kblk, vblk, pblk = inp
+        s = jnp.einsum("bskgh,btkh->bkgst", qg, kblk).astype(jnp.float32)
+        s = s * scale
+        keep = pblk[None, :] <= q_pos[:, None]      # (Sq, block)
+        dist = q_pos[:, None] - pblk[None, :]
+        if _is_static(window):
+            if window > 0:
+                keep &= dist < window
+        else:
+            keep &= (window <= 0) | (dist < window)
+        s = jnp.where(keep[None, None, None], s, NEG_INF)
+        m_blk = jnp.max(s, axis=-1)                 # (B,KV,G,Sq)
+        m_new = jnp.maximum(m, m_blk)
+        p_ = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p_, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgst,btkh->bkgsh", p_.astype(vblk.dtype), vblk
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, pb),
+                                  unroll=nb if a.block_unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+def gqa_forward(p, x, positions, a: AttentionConfig, window: int):
+    """Training/prefill full self-attention. x:(B,S,d)."""
+    q, k, v = _project_qkv(p, x, a)
+    if a.qk_norm:
+        q, k = head_rms_norm(q), head_rms_norm(k)
+    q = apply_rope(q, positions, a.rope_theta)
+    k = apply_rope(k, positions, a.rope_theta)
+    B, S = x.shape[:2]
+    if a.block_kv and S > a.block_kv:
+        out = gqa_attend_blockwise(q, k, v, positions[0], positions[0],
+                                   window, a, block=a.block_kv)
+    else:
+        keep = causal_window_mask(positions[0], positions[0], window)
+        out = gqa_attend(q, k, v, keep, a)
+    return jnp.einsum("bsf,fd->bsd", out.reshape(B, S, -1), p["wo"])
+
+
+def gqa_init_cache(batch: int, max_len: int, a: AttentionConfig, dtype):
+    return {
+        "k": jnp.zeros((batch, max_len, a.num_kv_heads, a.head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, a.num_kv_heads, a.head_dim), dtype),
+    }
+
+
+def gqa_decode(p, cache, x, pos, a: AttentionConfig, window: int):
+    """One-token decode. x:(B,1,d); pos: scalar int (current index).
+
+    Returns (out, new_cache)."""
+    q, k, v = _project_qkv(p, x, a)
+    if a.qk_norm:
+        q, k = head_rms_norm(q), head_rms_norm(k)
+    posv = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q = apply_rope(q, posv, a.rope_theta)
+    k = apply_rope(k, posv, a.rope_theta)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+    S = ck.shape[1]
+    keep = decode_keep(jnp.arange(S), pos, window)
+    out = gqa_attend(q, ck, cv, keep[None, :], a)
+    B = x.shape[0]
+    y = jnp.einsum("bsf,fd->bsd", out.reshape(B, 1, -1), p["wo"])
+    return y, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def mla_forward(p, x, positions, a: AttentionConfig, window: int):
+    """Training/prefill MLA. Naive (non-absorbed) expansion."""
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = jnp.split(q, [a.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, a.rope_theta)
+
+    c_kv = jnp.einsum("bsd,dr->bsr", x, p["wdkv"])          # (B,S,R)
+    k_rope = jnp.einsum("bsd,dr->bsr", x, p["wkr"])          # (B,S,rope)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        a.rope_theta)[:, :, 0, :]
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["wuk"])     # (B,S,H,nope)
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["wuv"])          # (B,S,H,vd)
+
+    scale = 1.0 / jnp.sqrt(a.qk_nope_dim + a.qk_rope_dim).astype(x.dtype)
+    s_nope = jnp.einsum("bshk,bthk->bhst", q_nope, k_nope)
+    s_rope = jnp.einsum("bshk,btk->bhst", q_rope, k_rope)
+    keep = causal_window_mask(positions[0], positions[0], window)
+    w = _masked_softmax((s_nope + s_rope) * scale, keep[None, None]).astype(x.dtype)
+    out = jnp.einsum("bhst,bthk->bshk", w, v).reshape(B, S, -1)
+    return jnp.einsum("bsf,fd->bsd", out, p["wo"])
+
+
+def mla_init_cache(batch: int, max_len: int, a: AttentionConfig, dtype):
+    return {
+        "ckv": jnp.zeros((batch, max_len, a.kv_lora_rank), dtype),
+        "kr": jnp.zeros((batch, max_len, a.qk_rope_dim), dtype),
+    }
+
+
+def mla_decode(p, cache, x, pos, a: AttentionConfig, window: int):
+    """Absorbed-matmul MLA decode: attends in the 512-d latent space."""
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = jnp.split(q, [a.qk_nope_dim], axis=-1)
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q_rope = apply_rope(q_rope, posv, a.rope_theta)
+    # absorb W_uk into the query: (B,1,H,nope) x (R,H,nope) -> (B,1,H,R)
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wuk"])
+
+    c_new = jnp.einsum("bsd,dr->bsr", x, p["wdkv"])
+    kr_new = jnp.einsum("bsd,dr->bsr", x, p["wkr"])
+    kr_new = apply_rope(kr_new[:, :, None, :], posv, a.rope_theta)[:, :, 0, :]
+    ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], c_new.astype(cache["ckv"].dtype), pos, axis=1)
+    kr = jax.lax.dynamic_update_slice_in_dim(cache["kr"], kr_new.astype(cache["kr"].dtype), pos, axis=1)
+
+    S = ckv.shape[1]
+    keep = decode_keep(jnp.arange(S), pos, window)
+    scale = 1.0 / jnp.sqrt(a.qk_nope_dim + a.qk_rope_dim).astype(x.dtype)
+    s_lat = jnp.einsum("bshr,btr->bhst", q_lat, ckv)
+    s_rope = jnp.einsum("bshk,btk->bhst", q_rope, kr)
+    w = _masked_softmax((s_lat + s_rope) * scale,
+                        keep[None, None, None, :]).astype(x.dtype)
+    o_lat = jnp.einsum("bhst,btr->bshr", w, ckv)             # (B,1,H,R)
+    out = jnp.einsum("bshr,rhk->bshk", o_lat, p["wuv"]).reshape(B, 1, -1)
+    y = jnp.einsum("bsf,fd->bsd", out, p["wo"])
+    return y, {"ckv": ckv, "kr": kr}
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+def attn_forward(p, x, positions, cfg: ArchConfig, window: int):
+    a = cfg.attention
+    if a.kv_lora_rank:
+        return mla_forward(p, x, positions, a, window)
+    return gqa_forward(p, x, positions, a, window)
+
+
+def attn_init_cache(batch: int, max_len: int, cfg: ArchConfig, dtype):
+    a = cfg.attention
+    if a.kv_lora_rank:
+        return mla_init_cache(batch, max_len, a, dtype)
+    return gqa_init_cache(batch, max_len, a, dtype)
+
+
+def attn_decode(p, cache, x, pos, cfg: ArchConfig, window: int):
+    a = cfg.attention
+    if a.kv_lora_rank:
+        return mla_decode(p, cache, x, pos, a, window)
+    return gqa_decode(p, cache, x, pos, a, window)

@@ -1,0 +1,221 @@
+"""Encoder-decoder transformer (SeamlessM4T backbone).
+
+Encoder consumes precomputed frontend frame embeddings (audio stub per the
+assignment carve-out), decoder is a causal text/unit decoder with cross
+attention. Decode caches: self-attn KV cache + precomputed cross-attn K/V.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist import act
+from repro.models import attention as attn_mod
+from repro.models.common import (dense_init, dtype_of, embed_init, rms_norm,
+                                 softmax_xent)
+from repro.models.mlp import init_mlp, mlp_forward
+from repro.models.transformer import _unroll_of
+
+
+def _init_enc_layer(key, cfg: ArchConfig, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": attn_mod.init_gqa(ks[0], cfg, cfg.attention, dtype),
+        "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+        "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _init_dec_layer(key, cfg: ArchConfig, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "self_attn": attn_mod.init_gqa(ks[0], cfg, cfg.attention, dtype),
+        "ln_x": jnp.zeros((cfg.d_model,), jnp.float32),
+        "cross_attn": attn_mod.init_gqa(ks[1], cfg, cfg.attention, dtype),
+        "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+        "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_encdec(key, cfg: ArchConfig):
+    dtype = dtype_of(cfg.param_dtype)
+    kemb, khead, kenc, kdec = jax.random.split(key, 4)
+    enc_keys = jnp.stack(jax.random.split(kenc, cfg.num_encoder_layers))
+    dec_keys = jnp.stack(jax.random.split(kdec, cfg.num_layers))
+    return {
+        "embed": embed_init(kemb, cfg.vocab_size, cfg.d_model, dtype),
+        "head": dense_init(khead, cfg.d_model, (cfg.vocab_size,), dtype),
+        "ln_enc": jnp.zeros((cfg.d_model,), jnp.float32),
+        "ln_dec": jnp.zeros((cfg.d_model,), jnp.float32),
+        "enc": jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(enc_keys),
+        "dec": jax.vmap(lambda k: _init_dec_layer(k, cfg, dtype))(dec_keys),
+    }
+
+
+def _bidir_attend(p, x, positions, cfg):
+    """Encoder self-attention (no causal mask)."""
+    a = cfg.attention
+    q, k, v = attn_mod._project_qkv(p, x, a)
+    q = attn_mod.apply_rope(q, positions, a.rope_theta)
+    k = attn_mod.apply_rope(k, positions, a.rope_theta)
+    S = x.shape[1]
+    keep = jnp.ones((S, S), bool)
+    out = attn_mod.gqa_attend(q, k, v, keep, a)
+    return jnp.einsum("bsf,fd->bsd", out.reshape(x.shape[0], S, -1), p["wo"])
+
+
+def _cross_attend(p, x, enc_out, q_positions, cfg):
+    a = cfg.attention
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    keep = jnp.ones((x.shape[1], enc_out.shape[1]), bool)
+    out = attn_mod.gqa_attend(q, k, v, keep, a)
+    return jnp.einsum("bsf,fd->bsd",
+                      out.reshape(x.shape[0], x.shape[1], -1), p["wo"])
+
+
+def encode(params, frames, cfg: ArchConfig, *, unroll: bool = False):
+    """frames: (B, T_src, d) stub embeddings -> encoder output (B,T_src,d)."""
+    dtype = dtype_of(cfg.dtype)
+    h = frames.astype(dtype)
+    B, S = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(x, lp):
+        x = x + _bidir_attend(lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+                              positions, cfg)
+        x = x + mlp_forward(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+        return act.constrain(x), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    if cfg.scan_layers:
+        h, _ = jax.lax.scan(body_fn, h, params["enc"],
+                            unroll=_unroll_of(unroll, cfg.num_encoder_layers))
+    else:
+        for j in range(cfg.num_encoder_layers):
+            lp = jax.tree.map(lambda v: v[j], params["enc"])
+            h, _ = body_fn(h, lp)
+    return rms_norm(h, params["ln_enc"], cfg.norm_eps)
+
+
+def decode_train(params, tokens, enc_out, cfg: ArchConfig,
+                 *, unroll: bool = False):
+    dtype = dtype_of(cfg.dtype)
+    h = params["embed"][tokens].astype(dtype)
+    B, S = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(x, lp):
+        x = x + attn_mod.gqa_forward(
+            lp["self_attn"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+            positions, cfg.attention, 0)
+        x = x + _cross_attend(lp["cross_attn"],
+                              rms_norm(x, lp["ln_x"], cfg.norm_eps),
+                              enc_out, positions, cfg)
+        x = x + mlp_forward(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+        return act.constrain(x), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    if cfg.scan_layers:
+        h, _ = jax.lax.scan(body_fn, h, params["dec"],
+                            unroll=_unroll_of(unroll, cfg.num_layers))
+    else:
+        for j in range(cfg.num_layers):
+            lp = jax.tree.map(lambda v: v[j], params["dec"])
+            h, _ = body_fn(h, lp)
+    h = rms_norm(h, params["ln_dec"], cfg.norm_eps)
+    return jnp.einsum("bsd,dv->bsv", h, params["head"].astype(dtype))
+
+
+def encdec_loss(params, batch, cfg: ArchConfig, *, unroll: bool = False):
+    enc_out = encode(params, batch["frames"], cfg, unroll=unroll)
+    logits = decode_train(params, batch["tokens"], enc_out, cfg, unroll=unroll)
+    labels = batch["labels"]
+    mask = labels >= 0
+    loss = softmax_xent(logits, jnp.maximum(labels, 0), mask)
+    return loss, {"loss": loss, "aux": jnp.zeros((), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+
+def init_encdec_cache(cfg: ArchConfig, batch: int, max_len: int):
+    """Self-attn cache + cross K/V (filled by prefill_encoder)."""
+    dtype = dtype_of(cfg.dtype)
+    a = cfg.attention
+    L = cfg.num_layers
+    self_c = jax.tree.map(
+        lambda v: jnp.broadcast_to(v[None], (L, *v.shape)),
+        attn_mod.gqa_init_cache(batch, max_len, a, dtype))
+    cross = {
+        "k": jnp.zeros((L, batch, cfg.encoder_seq_len, a.num_kv_heads,
+                        a.head_dim), dtype),
+        "v": jnp.zeros((L, batch, cfg.encoder_seq_len, a.num_kv_heads,
+                        a.head_dim), dtype),
+    }
+    return {"self": self_c, "cross": cross}
+
+
+def prefill_encoder(params, frames, cfg: ArchConfig, cache,
+                    *, unroll: bool = False):
+    """Run encoder and precompute per-layer cross-attention K/V."""
+    enc_out = encode(params, frames, cfg, unroll=unroll)
+
+    def kv(lp):
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_attn"]["wv"])
+        return k, v
+
+    ks, vs = jax.vmap(kv)(params["dec"])
+    return {"self": cache["self"],
+            "cross": {"k": ks.astype(cache["cross"]["k"].dtype),
+                      "v": vs.astype(cache["cross"]["v"].dtype)}}
+
+
+def encdec_decode_step(params, cache, tokens, pos, cfg: ArchConfig,
+                       *, seq_len: int, unroll: bool = False):
+    """One decoder token. tokens: (B,1)."""
+    dtype = dtype_of(cfg.dtype)
+    a = cfg.attention
+    h = params["embed"][tokens].astype(dtype)
+    # sliding-window for long-context shapes (sub-quadratic requirement)
+    window = cfg.long_context_window if seq_len > 100_000 else 0
+
+    def body(x, xs):
+        lp, sc, ck, cv = xs
+        y, nsc = attn_mod.gqa_decode(
+            lp["self_attn"], sc, rms_norm(x, lp["ln1"], cfg.norm_eps),
+            pos, a, window)
+        x = x + y
+        hq = rms_norm(x, lp["ln_x"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", hq, lp["cross_attn"]["wq"])
+        keep = jnp.ones((1, ck.shape[1]), bool)
+        out = attn_mod.gqa_attend(q, ck, cv, keep, a)
+        x = x + jnp.einsum("bsf,fd->bsd",
+                           out.reshape(x.shape[0], 1, -1),
+                           lp["cross_attn"]["wo"])
+        x = x + mlp_forward(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+        return x, nsc
+
+    if cfg.scan_layers:
+        h, new_self = jax.lax.scan(
+            body, h, (params["dec"], cache["self"],
+                      cache["cross"]["k"], cache["cross"]["v"]),
+            unroll=_unroll_of(unroll, cfg.num_layers))
+    else:
+        ncs = []
+        for j in range(cfg.num_layers):
+            xs = jax.tree.map(lambda v: v[j],
+                              (params["dec"], cache["self"],
+                               cache["cross"]["k"], cache["cross"]["v"]))
+            h, nc1 = body(h, xs)
+            ncs.append(nc1)
+        new_self = jax.tree.map(lambda *vs: jnp.stack(vs), *ncs)
+    h = rms_norm(h, params["ln_dec"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["head"].astype(dtype))
+    return logits, {"self": new_self, "cross": cache["cross"]}

@@ -1,0 +1,23 @@
+"""SwiGLU MLP (dense FFN)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, d_model, (d_ff,), dtype),   # gate
+        "wu": dense_init(k2, d_model, (d_ff,), dtype),   # up
+        "wd": dense_init(k3, d_ff, (d_model,), dtype),   # down
+    }
+
+
+def mlp_forward(p, x):
+    g = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    u = jnp.einsum("bsd,df->bsf", x, p["wu"])
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("bsf,fd->bsd", h, p["wd"])

@@ -1,0 +1,96 @@
+"""Mixture-of-Experts layer: top-k router + capacity-based dispatch.
+
+TPU-native design (GShard/Mixtral style): tokens are scattered into a dense
+``(E, C, d)`` expert buffer (capacity C per expert), experts run as one
+batched einsum sharded over the ``model`` axis (expert parallelism — GSPMD
+inserts the all-to-all at the token->expert resharding boundary), and results
+are combined with the router probabilities. Tokens overflowing an expert's
+capacity are dropped (contribute zero), the standard TPU MoE trade-off.
+
+Also computes the switch-transformer auxiliary load-balance loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.common import dense_init
+from repro.models.mlp import init_mlp, mlp_forward
+
+
+def init_moe(key, d_model: int, m: MoEConfig, dtype):
+    kr, ke, ks = jax.random.split(key, 3)
+    k1, k2, k3 = jax.random.split(ke, 3)
+    E, F = m.num_experts, m.expert_dim
+    p = {
+        "router": dense_init(kr, d_model, (E,), jnp.float32),
+        "wi": dense_init(k1, d_model, (E, F), dtype).transpose(1, 0, 2),
+        "wu": dense_init(k2, d_model, (E, F), dtype).transpose(1, 0, 2),
+        "wd": dense_init(k3, F, (E, d_model), dtype).transpose(1, 0, 2),
+    }
+    if m.num_shared_experts:
+        p["shared"] = init_mlp(ks, d_model,
+                               m.num_shared_experts * m.shared_expert_dim
+                               if m.shared_expert_dim else m.expert_dim,
+                               dtype)
+    return p
+
+
+def capacity(tokens: int, m: MoEConfig) -> int:
+    c = int(tokens * m.top_k / m.num_experts * m.capacity_factor)
+    return max(8, min(tokens, c))
+
+
+def moe_forward(p, x, m: MoEConfig):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    E, K = m.num_experts, m.top_k
+    C = capacity(T, m)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                     # (T,E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)               # (T,K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # --- position of each (token, choice) within its expert ----------------
+    # one-hot over experts for each of the K choices: (T, K, E)
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)
+    # rank of each choice within its expert, counted over flattened (T*K)
+    flat = onehot.reshape(T * K, E)
+    pos_in_expert = (jnp.cumsum(flat, axis=0) - flat)           # (T*K, E)
+    pos = jnp.sum(pos_in_expert * flat, axis=-1).reshape(T, K)  # (T,K)
+    keep = pos < C
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    # --- scatter tokens into the (E, C, d) buffer ---------------------------
+    slot = gate_idx * C + jnp.where(keep, pos, C * E)           # OOB -> drop
+    buf = jnp.zeros((E * C + 1, d), x.dtype)
+    # each token may occupy up to K slots
+    buf = buf.at[slot.reshape(-1)].set(
+        jnp.repeat(xt, K, axis=0), mode="drop")
+    buf = buf[:-1].reshape(E, C, d)
+
+    # --- expert computation (sharded over experts) --------------------------
+    g = jnp.einsum("ecd,edf->ecf", buf, p["wi"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["wu"])
+    h = jax.nn.silu(g) * u
+    out = jnp.einsum("ecf,efd->ecd", h, p["wd"])                # (E,C,d)
+
+    # --- gather back ---------------------------------------------------------
+    out_flat = out.reshape(E * C, d)
+    tok_out = out_flat[jnp.clip(slot, 0, E * C - 1).reshape(-1)]
+    tok_out = tok_out.reshape(T, K, d) * gate_vals[..., None].astype(x.dtype)
+    y = jnp.sum(tok_out, axis=1).reshape(B, S, d)
+
+    if "shared" in p:
+        y = y + mlp_forward(p["shared"], x)
+
+    # --- load-balance auxiliary loss (switch transformer eq. 4) -------------
+    me = jnp.mean(probs, axis=0)                                # (E,)
+    ce = jnp.mean(jnp.sum(onehot, axis=1).astype(jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce) * m.router_aux_weight
+    return y, aux

@@ -1,0 +1,112 @@
+"""Unified model API.
+
+``build_model(cfg)`` returns a ``Model`` with:
+- ``init(key) -> params``                     (master params, fp32)
+- ``loss_fn(params, batch, rng=None, unroll=False) -> (loss, metrics)``
+- ``forward(params, batch, unroll=False) -> logits``   (prefill path)
+- ``init_cache(batch, max_len) -> cache``     (decoder/encdec only)
+- ``decode_step(params, cache, batch, pos, seq_len, unroll) -> (logits, cache)``
+
+Mixed precision: forward/loss cast >=2-D fp32 master weights to the compute
+dtype (bf16) at entry; gradients flow back to fp32 masters.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, transformer, vision
+from repro.models.common import dtype_of
+
+
+def cast_params(params, dtype):
+    """Cast matmul weights (ndim>=2 floats) to the compute dtype; keep
+    norm scales / biases / integer leaves as-is."""
+
+    def leaf(p):
+        if p.ndim >= 2 and p.dtype == jnp.float32:
+            return p.astype(dtype)
+        return p
+
+    return jax.tree.map(leaf, params)
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable
+    loss_fn: Callable
+    forward: Callable
+    init_cache: Callable | None = None
+    decode_step: Callable | None = None
+    prefill: Callable | None = None
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    cdt = dtype_of(cfg.dtype)
+
+    if cfg.family == "decoder":
+        def loss_fn(params, batch, rng=None, unroll=False):
+            return transformer.decoder_loss(cast_params(params, cdt), batch,
+                                            cfg, unroll=unroll)
+
+        def forward(params, batch, unroll=False):
+            return transformer.decoder_forward(cast_params(params, cdt),
+                                               batch, cfg, unroll=unroll)[0]
+
+        def init_cache(batch, max_len):
+            return transformer.init_decoder_cache(cfg, batch, max_len)
+
+        def decode_step(params, cache, batch, pos, seq_len, unroll=False):
+            return transformer.decoder_decode_step(
+                cast_params(params, cdt), cache, batch["tokens"], pos, cfg,
+                seq_len=seq_len, unroll=unroll)
+
+        return Model(cfg, lambda k: transformer.init_decoder(k, cfg),
+                     loss_fn, forward, init_cache, decode_step)
+
+    if cfg.family == "encdec":
+        def loss_fn(params, batch, rng=None, unroll=False):
+            return encdec.encdec_loss(cast_params(params, cdt), batch, cfg,
+                                      unroll=unroll)
+
+        def forward(params, batch, unroll=False):
+            p = cast_params(params, cdt)
+            enc_out = encdec.encode(p, batch["frames"], cfg, unroll=unroll)
+            return encdec.decode_train(p, batch["tokens"], enc_out, cfg,
+                                       unroll=unroll)
+
+        def init_cache(batch, max_len):
+            return encdec.init_encdec_cache(cfg, batch, max_len)
+
+        def decode_step(params, cache, batch, pos, seq_len, unroll=False):
+            return encdec.encdec_decode_step(
+                cast_params(params, cdt), cache, batch["tokens"], pos, cfg,
+                seq_len=seq_len, unroll=unroll)
+
+        def prefill(params, frames, cache, unroll=False):
+            return encdec.prefill_encoder(cast_params(params, cdt), frames,
+                                          cfg, cache, unroll=unroll)
+
+        return Model(cfg, lambda k: encdec.init_encdec(k, cfg),
+                     loss_fn, forward, init_cache, decode_step, prefill)
+
+    if cfg.family == "conv":
+        def loss_fn(params, batch, rng=None, unroll=False):
+            return vision.conv_loss(params, batch, cfg, rng, unroll=unroll)
+
+        def forward(params, batch, unroll=False):
+            return vision.conv_predict(params, batch["images"], cfg)
+
+        return Model(cfg, lambda k: vision.init_conv(k, cfg), loss_fn,
+                     forward)
+
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def count_params(params) -> int:
+    return sum(p.size for p in jax.tree.leaves(params))

@@ -1,0 +1,251 @@
+"""Mamba-2 SSD (state-space duality) block.  [arXiv:2405.21060]
+
+TPU adaptation: the SSD *chunked* algorithm is used for training/prefill —
+it recasts the selective scan as block matmuls (MXU-friendly: intra-chunk
+quadratic attention-like term + inter-chunk state recurrence via lax.scan),
+instead of the CUDA selective-scan kernel. Decode keeps the O(1) recurrent
+state update: h <- exp(dt*A) h + dt * B x ; y = C h + D x.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.common import dense_init, rms_norm
+
+
+def d_inner_of(d_model: int, s: SSMConfig) -> int:
+    return s.expand * d_model
+
+
+def num_heads_of(d_model: int, s: SSMConfig) -> int:
+    return d_inner_of(d_model, s) // s.head_dim
+
+
+def init_ssm(key, d_model: int, s: SSMConfig, dtype):
+    di = d_inner_of(d_model, s)
+    nh = num_heads_of(d_model, s)
+    G, N = s.ngroups, s.state_dim
+    ks = jax.random.split(key, 6)
+    # separate projections (z, x head-sharded over TP; B/C/dt small, replicated)
+    p = {
+        "wz": dense_init(ks[0], d_model, (di,), dtype),
+        "wx": dense_init(ks[4], d_model, (di,), dtype),
+        "wbc": dense_init(ks[5], d_model, (2 * G * N,), dtype),
+        "wdt": dense_init(jax.random.fold_in(key, 9), d_model, (nh,), dtype),
+        "out_proj": dense_init(ks[1], di, (d_model,), dtype),
+        "conv_w": (jax.random.normal(ks[2], (s.conv_width, di + 2 * G * N),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di + 2 * G * N,), dtype),
+        # A in (-exp) log-space, per head; dt bias; D skip
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jax.random.uniform(ks[3], (nh,)) * 0.1 + 0.001,
+                     1e-4, 0.1))).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm": jnp.zeros((di,), jnp.float32),  # gated RMSNorm scale
+    }
+    return p
+
+
+def _project(p, x):
+    """x: (..., d) -> z (..., di), xBC (..., di+2GN), dt (..., nh)."""
+    z = jnp.einsum("...d,dk->...k", x, p["wz"])
+    xs = jnp.einsum("...d,dk->...k", x, p["wx"])
+    bc = jnp.einsum("...d,dk->...k", x, p["wbc"])
+    dt = jnp.einsum("...d,dk->...k", x, p["wdt"])
+    return z, jnp.concatenate([xs, bc], axis=-1), dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv along seq. xBC:(B,S,D), w:(W,D)."""
+    W = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC, dtype=jnp.float32)
+    for i in range(W):
+        out = out + pad[:, i:i + xBC.shape[1], :].astype(jnp.float32) \
+            * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(xBC.dtype)
+
+
+def _segsum(x):
+    """Stable segment-sum: out[..., i, j] = sum_{j<k<=i} x[..., k]."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD forward.
+
+    x: (b, s, h, p)   dt: (b, s, h)   A: (h,) negative
+    B, C: (b, s, g, n)   returns y: (b, s, h, p), final_state (b,h,p,n)
+    """
+    b, S0, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    Q = chunk
+    pad = (-S0) % Q
+    if pad:
+        # zero dt on padding: decay=1, contribution=0 -> outputs unaffected
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S = S0 + pad
+    nc = S // Q
+    rep = h // g
+
+    # work in fp32 for the recurrence
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = jnp.repeat(B.astype(jnp.float32), rep, axis=2)  # (b,s,h,n)
+    Cf = jnp.repeat(C.astype(jnp.float32), rep, axis=2)
+
+    # chunk
+    xc = xf.reshape(b, nc, Q, h, p)
+    dtc = dtf.reshape(b, nc, Q, h)
+    Bc = Bf.reshape(b, nc, Q, h, n)
+    Cc = Cf.reshape(b, nc, Q, h, n)
+    dA = dtc * A  # (b,nc,Q,h)
+
+    # 1. intra-chunk (diagonal block) output
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))       # (b,nc,h,Q,Q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Cc, Bc)    # (b,nc,h,Q,Q)
+    y_diag = jnp.einsum("bchqk,bchqk,bckh,bckhp->bcqhp",
+                        scores, L, dtc, xc)
+
+    # 2. per-chunk end states
+    dA_cum = jnp.cumsum(dA, axis=2)                      # (b,nc,Q,h)
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # (b,nc,Q,h)
+    states = jnp.einsum("bcqhn,bcqh,bcqh,bcqhp->bchnp",
+                        Bc, decay_to_end, dtc, xc)       # (b,nc,h,n,p)
+
+    # 3. inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])           # (b,nc,h)
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit state *entering* the chunk
+
+    init = jnp.zeros((b, h, n, p), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        step,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)   # (b,nc,h,n,p)
+
+    # 4. inter-chunk (off-diagonal) output
+    decay_in = jnp.exp(dA_cum)                           # (b,nc,Q,h)
+    y_off = jnp.einsum("bcqhn,bcqh,bchnp->bcqhp",
+                       Cc, decay_in, prev_states)
+
+    y = (y_diag + y_off).reshape(b, S, h, p)[:, :S0]
+    return y.astype(x.dtype), final
+
+
+def ssm_forward(p, x, d_model: int, s: SSMConfig, eps: float = 1e-5):
+    """Training/prefill SSD block. x: (B,S,d) -> (B,S,d)."""
+    di = d_inner_of(d_model, s)
+    nh = num_heads_of(d_model, s)
+    G, N = s.ngroups, s.state_dim
+    B_, S_, _ = x.shape
+
+    z, xBC, dt = _project(p, x)
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xs = xBC[..., :di].reshape(B_, S_, nh, s.head_dim)
+    Bm = xBC[..., di:di + G * N].reshape(B_, S_, G, N)
+    Cm = xBC[..., di + G * N:].reshape(B_, S_, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    y, _ = ssd_chunked(xs, dt, A, Bm, Cm, s.chunk)
+    y = y + xs.astype(jnp.float32).astype(y.dtype) * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B_, S_, di)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm"], eps)
+    return jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+
+
+# ---------------------------------------------------------------------------
+# recurrent decode
+# ---------------------------------------------------------------------------
+
+def ssm_init_cache(batch: int, d_model: int, s: SSMConfig, dtype):
+    di = d_inner_of(d_model, s)
+    nh = num_heads_of(d_model, s)
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1,
+                           di + 2 * s.ngroups * s.state_dim), dtype),
+        "state": jnp.zeros((batch, nh, s.state_dim, s.head_dim), jnp.float32),
+    }
+
+
+def ssm_decode(p, cache, x, d_model: int, s: SSMConfig, eps: float = 1e-5):
+    """Single-token recurrent step. x: (B,1,d)."""
+    di = d_inner_of(d_model, s)
+    nh = num_heads_of(d_model, s)
+    G, N = s.ngroups, s.state_dim
+    Bsz = x.shape[0]
+
+    z, xBC, dt = _project(p, x[:, 0])                          # (B, .)
+    # conv over the rolling window
+    win = jnp.concatenate([cache["conv"],
+                           xBC[:, None, :].astype(cache["conv"].dtype)], axis=1)
+    conv_out = jnp.einsum("bwk,wk->bk", win.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+    xBC = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    new_conv = win[:, 1:, :]
+
+    xs = xBC[..., :di].reshape(Bsz, nh, s.head_dim)
+    Bm = xBC[..., di:di + G * N].reshape(Bsz, G, N)
+    Cm = xBC[..., di + G * N:].reshape(Bsz, G, N)
+    rep = nh // G
+    Bh = jnp.repeat(Bm.astype(jnp.float32), rep, axis=1)      # (B,nh,N)
+    Ch = jnp.repeat(Cm.astype(jnp.float32), rep, axis=1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,nh)
+    A = -jnp.exp(p["A_log"])                                   # (nh,)
+    decay = jnp.exp(dt * A)                                    # (B,nh)
+
+    h = cache["state"]                                         # (B,nh,N,P)
+    h = h * decay[..., None, None] + jnp.einsum(
+        "bhn,bh,bhp->bhnp", Bh, dt, xs.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, h)                     # (B,nh,P)
+    y = y + xs.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(Bsz, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)[:, None, :],
+                 p["norm"], eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    return out, {"conv": new_conv, "state": h}
+
+
+# ---------------------------------------------------------------------------
+# naive reference (oracle for tests)
+# ---------------------------------------------------------------------------
+
+def ssd_naive(x, dt, A, B, C):
+    """Sequential recurrence oracle, O(S) scan. Shapes as ssd_chunked."""
+    b, S, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bf = jnp.repeat(B.astype(jnp.float32), rep, axis=2)
+    Cf = jnp.repeat(C.astype(jnp.float32), rep, axis=2)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(hst, t):
+        decay = jnp.exp(dtf[:, t] * A)                        # (b,h)
+        hst = hst * decay[..., None, None] + jnp.einsum(
+            "bhn,bh,bhp->bhnp", Bf[:, t], dtf[:, t], xf[:, t])
+        y = jnp.einsum("bhn,bhnp->bhp", Cf[:, t], hst)
+        return hst, y
+
+    init = jnp.zeros((b, h, n, p), jnp.float32)
+    final, ys = jax.lax.scan(step, init, jnp.arange(S))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final

@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (Optimizer, get_optimizer, sgd_momentum,
+                                    adamw)
+from repro.optim.schedule import (step_decay, poly_decay, warmup_cosine,
+                                  constant)

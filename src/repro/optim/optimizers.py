@@ -1,0 +1,95 @@
+"""Optimizers in pure JAX (no optax): momentum SGD (the paper's optimizer,
+supporting both AWAGD and SUBGD parallel-SGD schemes) and AdamW.
+
+An ``Optimizer`` is (init, update):
+    state = init(params)
+    new_params, new_state = update(params, grads, state, lr)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable
+
+
+def sgd_momentum(momentum: float = 0.9, weight_decay: float = 5e-4,
+                 nesterov: bool = False, fused_kernel=None) -> Optimizer:
+    """The paper's momentum SGD.
+
+    ``fused_kernel``: optional Pallas fused update (ops.fused_sgd) applied to
+    2D-reshapeable fp32 leaves; falls back to pure-jnp elsewhere.
+    """
+
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                  params)}
+
+    def update(params, grads, state, lr):
+        def leaf(p, g, m):
+            g32 = g.astype(jnp.float32)
+            if weight_decay and p.ndim > 1:
+                g32 = g32 + weight_decay * p.astype(jnp.float32)
+            if fused_kernel is not None and p.ndim >= 1:
+                p_new, m_new = fused_kernel(p.astype(jnp.float32), g32, m,
+                                            lr, momentum, nesterov)
+                return p_new.astype(p.dtype), m_new
+            m_new = momentum * m + g32
+            step = (g32 + momentum * m_new) if nesterov else m_new
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m_new
+
+        out = jax.tree.map(leaf, params, grads, state["m"])
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"m": new_m}
+
+    return Optimizer("sgd", init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state, lr):
+        t = state["t"] + 1
+        bc1 = 1.0 - b1 ** t.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** t.astype(jnp.float32)
+
+        def leaf(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g32
+            v_new = b2 * v + (1 - b2) * jnp.square(g32)
+            step = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+            p32 = p.astype(jnp.float32)
+            if weight_decay and p.ndim > 1:
+                step = step + weight_decay * p32
+            return (p32 - lr * step).astype(p.dtype), m_new, v_new
+
+        out = jax.tree.map(leaf, params, grads, state["m"], state["v"])
+        pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                      is_leaf=lambda t: isinstance(t, tuple))
+        return pick(0), {"m": pick(1), "v": pick(2), "t": t}
+
+    return Optimizer("adamw", init, update)
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd_momentum(**kw)
+    if name == "adamw":
+        return adamw(**kw)
+    raise KeyError(name)

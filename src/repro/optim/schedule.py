@@ -1,0 +1,38 @@
+"""LR schedules, including the paper's two policies:
+
+- AlexNet: "scaling down by a factor of 10 every 20 epochs"  -> step_decay
+- GoogLeNet: eta = eta0 * (1 - iter/max_iter)^0.5            -> poly_decay
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def step_decay(lr0: float, steps_per_drop: int, factor: float = 0.1):
+    def f(step):
+        drops = jnp.floor(step / steps_per_drop)
+        return jnp.asarray(lr0, jnp.float32) * factor ** drops
+    return f
+
+
+def poly_decay(lr0: float, max_steps: int, power: float = 0.5):
+    def f(step):
+        frac = jnp.clip(step.astype(jnp.float32) / max_steps, 0.0, 1.0)
+        return jnp.asarray(lr0, jnp.float32) * (1.0 - frac) ** power
+    return f
+
+
+def warmup_cosine(lr0: float, warmup: int, max_steps: int,
+                  min_frac: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        wu = jnp.minimum(s / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((s - warmup) / jnp.maximum(max_steps - warmup, 1),
+                        0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.asarray(lr0, jnp.float32) * wu * cos
+    return f

@@ -1,0 +1,143 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Terms (per device, TPU v5e constants):
+    compute    = HLO_flops / PEAK_FLOPS
+    memory     = HLO_bytes / HBM_BW
+    collective = collective_bytes / ICI_BW
+
+``cost_analysis()`` reports PER-DEVICE flops/bytes post-partitioning (verified
+empirically), with while-loop bodies counted ONCE — the dry-run therefore
+unrolls layer scans. Collective bytes are parsed from the optimized HLO
+(``compiled.as_text()``): per-shard operand shapes of all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+# TPU v5e
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # B/s
+ICI_BW = 50e9            # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# result may be a single shape or a tuple of shapes; sum every shape
+_COLL_RE = re.compile(
+    r"=\s+(\([^)]*\)|[a-z0-9]+\[[\d,]*\]\S*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=dict)
+    bytes_by_kind: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum per-device bytes moved by each collective op.
+
+    Approximation (documented): bytes-moved-per-device ~ result-shape bytes
+    for AG/RS/A2A/permute; 2x for all-reduce (reduce + broadcast phases of a
+    ring). The (k-1)/k factor is dropped (<7% at k=16).
+    """
+    stats = CollectiveStats()
+    for m in _COLL_RE.finditer(hlo_text):
+        shapes, kind = m.group(1), m.group(2)
+        b = sum(_shape_bytes(dt, dims)
+                for dt, dims in _SHAPE_RE.findall(shapes))
+        if kind == "all-reduce":
+            b *= 2
+        stats.counts[kind] = stats.counts.get(kind, 0) + 1
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + b
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    model_flops: float = 0.0     # analytic 6ND (per device)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+        }
+
+
+def analyze(compiled, *, model_flops_per_device: float = 0.0) -> dict:
+    """Full analysis of one compiled executable."""
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    txt = compiled.as_text()
+    colls = parse_collectives(txt)
+    rl = Roofline(flops, hbm, colls.total_bytes,
+                  model_flops=model_flops_per_device)
+    ma = compiled.memory_analysis()
+    return {
+        "roofline": rl.as_dict(),
+        "collectives": {"counts": colls.counts,
+                        "bytes_by_kind": colls.bytes_by_kind},
+        "memory": {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "peak_bytes": int(getattr(ma, "temp_size_in_bytes", 0))
+            + int(getattr(ma, "argument_size_in_bytes", 0)),
+        },
+    }
+
+
+def model_flops_6nd(n_active_params: int, tokens: int, kind: str) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D train, 2*N*D inference (fwd only)."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active_params * tokens

@@ -1,0 +1,45 @@
+"""Serving: batched autoregressive decode against a KV/SSM cache."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.registry import Model, build_model
+
+
+def make_serve_step(model: Model, *, seq_len: int, unroll: bool = False):
+    """Returns ``serve(params, cache, tokens(B,1), pos) -> (next, cache)``
+    sampling greedily. ``pos`` is the current cache write index."""
+
+    def serve(params, cache, tokens, pos):
+        logits, cache = model.decode_step(params, cache,
+                                          {"tokens": tokens}, pos,
+                                          seq_len=seq_len, unroll=unroll)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt[:, None], cache
+
+    return serve
+
+
+def generate(model: Model, params, prompt, *, max_new: int, seq_len: int,
+             mesh=None):
+    """Greedy generation: prefill the prompt token-by-token (functional
+    reference path), then decode ``max_new`` tokens."""
+    B, S0 = prompt.shape
+    total = S0 + max_new
+    cache = model.init_cache(B, total)
+    serve = jax.jit(make_serve_step(model, seq_len=total))
+    tok = prompt[:, :1]
+    out = [tok]
+    for i in range(total - 1):
+        if i + 1 < S0:
+            nxt_forced = prompt[:, i + 1:i + 2]
+            _, cache = serve(params, cache, tok, jnp.int32(i))
+            tok = nxt_forced
+        else:
+            tok, cache = serve(params, cache, tok, jnp.int32(i))
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

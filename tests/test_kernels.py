@@ -1,0 +1,103 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
+sweeping shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.chunk_sum import chunk_sum as raw_chunk_sum
+from repro.kernels.fused_sgd import fused_sgd as raw_fused_sgd
+from repro.kernels.quantize import (quant_int8 as raw_quant_int8,
+                                    dequant_int8 as raw_dequant_int8)
+
+
+@pytest.mark.parametrize("k", [2, 4, 8, 16])
+@pytest.mark.parametrize("n", [100, 2048, 5000])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float16, jnp.bfloat16])
+def test_chunk_sum_matches_ref(k, n, dtype):
+    x = (jax.random.normal(jax.random.key(k * n), (k, n)) * 3).astype(dtype)
+    got = raw_chunk_sum(x, interpret=True)
+    want = ref.chunk_sum_ref(x)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("block_n", [256, 2048])
+def test_chunk_sum_block_sizes(block_n):
+    x = jax.random.normal(jax.random.key(0), (4, 3333)).astype(jnp.bfloat16)
+    got = raw_chunk_sum(x, block_n=block_n, interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.chunk_sum_ref(x)), rtol=1e-6)
+
+
+def test_chunk_sum_fp32_accumulation_beats_fp16():
+    # many small fp16 values: fp16 accumulation would lose precision
+    k, n = 16, 512
+    x = jnp.full((k, n), 0.1, jnp.float16)
+    got = raw_chunk_sum(x, interpret=True)
+    fp16_sum = x.sum(axis=0)  # fp16 accumulate
+    exact = k * np.float32(np.float16(0.1))
+    assert abs(float(got[0]) - exact) <= abs(float(fp16_sum[0]) - exact)
+
+
+@pytest.mark.parametrize("n", [100, 2048, 4096 + 17])
+def test_quant_int8_roundtrip_and_ref(n):
+    x = jax.random.normal(jax.random.key(n), (n,)) * 5
+    q, s = raw_quant_int8(x, interpret=True)
+    qr, sr = ref.quant_int8_ref(x)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    d = raw_dequant_int8(q, s, interpret=True)
+    # error bounded by scale/2 per block
+    err = np.max(np.abs(np.asarray(d) - np.asarray(x)))
+    assert err <= float(jnp.max(s)) * 0.5 + 1e-6
+
+
+@pytest.mark.parametrize("n", [128, 5000])
+@pytest.mark.parametrize("nesterov", [False, True])
+def test_fused_sgd_matches_ref(n, nesterov):
+    key = jax.random.key(n)
+    p = jax.random.normal(key, (n,))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    m = jax.random.normal(jax.random.fold_in(key, 2), (n,))
+    po, mo = raw_fused_sgd(p, g, m, 0.05, momentum=0.9, nesterov=nesterov,
+                           interpret=True)
+    pr, mr = ref.fused_sgd_ref(p, g, m, 0.05, momentum=0.9, nesterov=nesterov)
+    np.testing.assert_allclose(np.asarray(po), np.asarray(pr), rtol=2e-5,
+                               atol=1e-7)
+    np.testing.assert_allclose(np.asarray(mo), np.asarray(mr), rtol=2e-5,
+                               atol=1e-7)
+
+
+def test_ops_wrappers_nd_shapes():
+    x = jax.random.normal(jax.random.key(0), (4, 8, 16)).astype(jnp.bfloat16)
+    got = ops.chunk_sum(x)
+    assert got.shape == (8, 16)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.chunk_sum_ref(x.reshape(4, -1))
+                                          .reshape(8, 16)), rtol=1e-6)
+    p = jax.random.normal(jax.random.key(1), (8, 16))
+    po, mo = ops.fused_sgd(p, p, jnp.zeros_like(p), 0.1)
+    assert po.shape == (8, 16)
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(2, 8), n=st.integers(1, 600))
+def test_chunk_sum_property(k, n):
+    x = (jax.random.normal(jax.random.key(k + 31 * n), (k, n)) * 2).astype(
+        jnp.float16)
+    got = raw_chunk_sum(x, block_n=256, interpret=True)
+    want = np.asarray(x, np.float32).sum(axis=0)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 3000))
+def test_int8_error_bound_property(n):
+    x = jax.random.normal(jax.random.key(n), (n,)) * 10
+    q, s = ref.quant_int8_ref(x)
+    d = ref.dequant_int8_ref(q, s)
+    err = np.max(np.abs(np.asarray(d) - np.asarray(x)))
+    assert err <= float(jnp.max(s)) * 0.5 + 1e-6

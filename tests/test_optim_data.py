@@ -1,0 +1,159 @@
+"""Optimizers, LR schedules, data pipeline (Alg 1), and checkpointing."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import restore_checkpoint, save_checkpoint
+from repro.data.prefetch import ParallelLoader, SyncLoader, preprocess_images
+from repro.data.synthetic import (ImageSource, LMTokenSource,
+                                  materialize_batch_files)
+from repro.kernels import ops
+from repro.optim import (adamw, constant, poly_decay, sgd_momentum,
+                         step_decay, warmup_cosine)
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def test_sgd_momentum_hand_check():
+    opt = sgd_momentum(momentum=0.5, weight_decay=0.0)
+    params = {"w": jnp.array([[1.0, 2.0]])}
+    st = opt.init(params)
+    g = {"w": jnp.array([[0.5, -1.0]])}
+    p1, st = opt.update(params, g, st, 0.1)
+    np.testing.assert_allclose(np.asarray(p1["w"]), [[0.95, 2.1]], rtol=1e-6)
+    p2, st = opt.update(p1, g, st, 0.1)
+    # m = 0.5*0.5+0.5 = 0.75 ; p = 0.95 - 0.075
+    np.testing.assert_allclose(np.asarray(p2["w"])[0, 0], 0.875, rtol=1e-6)
+
+
+def test_sgd_fused_kernel_path_equivalence():
+    params = {"w": jax.random.normal(jax.random.key(0), (64, 8))}
+    g = {"w": jax.random.normal(jax.random.key(1), (64, 8))}
+    o1 = sgd_momentum(momentum=0.9, weight_decay=0.0)
+    o2 = sgd_momentum(momentum=0.9, weight_decay=0.0,
+                      fused_kernel=ops.fused_sgd)
+    p1, s1 = o1.update(params, g, o1.init(params), 0.05)
+    p2, s2 = o2.update(params, g, o2.init(params), 0.05)
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p2["w"]),
+                               rtol=2e-5, atol=1e-7)
+
+
+def test_adamw_decreases_quadratic():
+    opt = adamw(weight_decay=0.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    st = opt.init(params)
+    for _ in range(200):
+        g = {"w": 2 * params["w"]}
+        params, st = opt.update(params, g, st, 0.05)
+    assert float(jnp.abs(params["w"]).max()) < 0.3
+
+
+def test_schedules():
+    sd = step_decay(0.1, steps_per_drop=10)
+    assert float(sd(jnp.int32(0))) == pytest.approx(0.1)
+    assert float(sd(jnp.int32(10))) == pytest.approx(0.01)
+    pd = poly_decay(0.1, 100, power=0.5)  # the paper's GoogLeNet policy
+    assert float(pd(jnp.int32(0))) == pytest.approx(0.1)
+    assert float(pd(jnp.int32(100))) == pytest.approx(0.0, abs=1e-6)
+    vals = [float(pd(jnp.int32(s))) for s in range(0, 100, 10)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+    wc = warmup_cosine(0.1, 10, 100)
+    assert float(wc(jnp.int32(0))) == pytest.approx(0.0)
+    assert float(wc(jnp.int32(10))) == pytest.approx(0.1, rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline (paper Alg 1)
+# ---------------------------------------------------------------------------
+
+def test_parallel_loader_matches_sync(tmp_path):
+    src = ImageSource(32, 4, seed=1)
+    files = materialize_batch_files(src, str(tmp_path), 6, batch_size=4)
+    mean = np.zeros((32, 32, 3), np.float32)
+    sync = list(SyncLoader(files, image_mean=mean, crop=28, seed=9))
+    par = list(ParallelLoader(files, image_mean=mean, crop=28, seed=9))
+    assert len(sync) == len(par) == 6
+    for a, b in zip(sync, par):
+        np.testing.assert_allclose(np.asarray(a["images"]),
+                                   np.asarray(b["images"]))
+        np.testing.assert_array_equal(np.asarray(a["labels"]),
+                                      np.asarray(b["labels"]))
+
+
+def test_parallel_loader_overlaps(tmp_path):
+    """Alg 1's contract: loading runs ahead while the consumer computes."""
+    src = ImageSource(16, 4)
+    files = materialize_batch_files(src, str(tmp_path), 4, batch_size=2)
+    loader = ParallelLoader(files, depth=2)
+    time.sleep(0.5)  # give the thread time to prefetch depth batches
+    t0 = time.perf_counter()
+    b = loader.get()
+    dt = time.perf_counter() - t0
+    assert b is not None
+    assert dt < 0.2, f"first get() blocked {dt:.3f}s — no prefetch happened"
+    loader.stop()
+
+
+def test_parallel_loader_stop_mid_stream(tmp_path):
+    src = ImageSource(16, 4)
+    files = materialize_batch_files(src, str(tmp_path), 50, batch_size=2)
+    loader = ParallelLoader(files, depth=2)
+    assert loader.get() is not None
+    loader.stop()  # must not hang
+
+
+def test_preprocess_crop_mirror_deterministic():
+    rng1 = np.random.default_rng(3)
+    rng2 = np.random.default_rng(3)
+    batch = {"images": np.arange(2 * 16 * 16 * 3, dtype=np.float32)
+             .reshape(2, 16, 16, 3)}
+    mean = np.ones((16, 16, 3), np.float32)
+    a = preprocess_images(batch, mean, 12, rng1)
+    b = preprocess_images(batch, mean, 12, rng2)
+    np.testing.assert_array_equal(a["images"], b["images"])
+    assert a["images"].shape == (2, 12, 12, 3)
+
+
+def test_lm_source_next_token_structure():
+    src = LMTokenSource(100, 16, seed=0)
+    b = src.batch(4, 0)
+    assert b["tokens"].shape == (4, 16) and b["labels"].shape == (4, 16)
+    # labels are the shifted sequence
+    b2 = src.batch(4, 0)
+    np.testing.assert_array_equal(b["tokens"], b2["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    state = {
+        "params": {"a": jnp.arange(6.0).reshape(2, 3),
+                   "blocks": [{"w": jnp.ones((4,), jnp.bfloat16)},
+                              {"w": jnp.zeros((4,), jnp.bfloat16)}]},
+        "opt": {"m": {"a": jnp.full((2, 3), 0.5)}},
+        "step": jnp.int32(17),
+    }
+    path = str(tmp_path / "ckpt")
+    save_checkpoint(path, state, step=17)
+    like = jax.tree.map(jnp.zeros_like, state)
+    restored = restore_checkpoint(path, like)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_mismatch_raises(tmp_path):
+    state = {"params": {"a": jnp.zeros((2,))}}
+    path = str(tmp_path / "ckpt")
+    save_checkpoint(path, state)
+    with pytest.raises(ValueError):
+        restore_checkpoint(path, {"params": {"b": jnp.zeros((2,))}})

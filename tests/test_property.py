@@ -1,0 +1,93 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.common import softmax_xent
+from repro.models.ssm import _segsum, ssd_chunked, ssd_naive
+from repro.optim import poly_decay, step_decay, warmup_cosine
+
+
+@settings(max_examples=25, deadline=None)
+@given(t=st.integers(2, 12))
+def test_segsum_definition(t):
+    x = jax.random.normal(jax.random.key(t), (t,))
+    out = np.asarray(_segsum(x))
+    xs = np.asarray(x)
+    for i in range(t):
+        for j in range(t):
+            if j > i:
+                assert out[i, j] == -np.inf
+            else:
+                np.testing.assert_allclose(out[i, j], xs[j + 1:i + 1].sum(),
+                                           rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(3, 40), chunk=st.sampled_from([4, 8, 16]),
+       h=st.sampled_from([1, 2, 4]))
+def test_ssd_chunked_equals_naive_property(s, chunk, h):
+    key = jax.random.key(s * 131 + chunk)
+    b, p, n = 1, 4, 8
+    x = jax.random.normal(key, (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1),
+                                           (b, s, h)) - 1)
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (h,)) * 0.2)
+    B = jax.random.normal(jax.random.fold_in(key, 3), (b, s, 1, n))
+    C = jax.random.normal(jax.random.fold_in(key, 4), (b, s, 1, n))
+    y1, _ = ssd_chunked(x, dt, A, B, C, chunk)
+    y2, _ = ssd_naive(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 50), v=st.integers(2, 30))
+def test_softmax_xent_matches_numpy(n, v):
+    key = jax.random.key(n * 57 + v)
+    logits = jax.random.normal(key, (n, v)) * 3
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, v)
+    got = float(softmax_xent(logits, labels))
+    lg = np.asarray(logits, np.float64)
+    p = lg - np.log(np.exp(lg - lg.max(-1, keepdims=True)).sum(-1,
+                    keepdims=True)) - lg.max(-1, keepdims=True)
+    want = -p[np.arange(n), np.asarray(labels)].mean()
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(lr0=st.floats(1e-4, 1.0), steps=st.integers(10, 1000))
+def test_schedules_bounded_and_monotone(lr0, steps):
+    pd = poly_decay(lr0, steps)
+    sd = step_decay(lr0, max(steps // 5, 1))
+    vals_p = [float(pd(jnp.int32(s))) for s in range(0, steps, max(steps // 10, 1))]
+    vals_s = [float(sd(jnp.int32(s))) for s in range(0, steps, max(steps // 10, 1))]
+    assert all(0 <= v <= lr0 * (1 + 1e-6) for v in vals_p + vals_s)
+    assert all(a >= b - 1e-9 for a, b in zip(vals_p, vals_p[1:]))
+    assert all(a >= b - 1e-9 for a, b in zip(vals_s, vals_s[1:]))
+
+
+@settings(max_examples=15, deadline=None)
+@given(k=st.integers(1, 8), n=st.integers(1, 500))
+def test_pad_chunk_roundtrip(k, n):
+    """The exchangers' pad->chunk->unpad plumbing is lossless."""
+    from repro.core.exchanger import _pad_to
+    g = jax.random.normal(jax.random.key(k * 7 + n), (n, 3))
+    gp, n0 = _pad_to(g, k)
+    assert gp.shape[0] % k == 0 and n0 == n
+    chunks = gp.reshape(k, -1, 3)
+    back = chunks.reshape(-1, 3)[:n]
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(g))
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 3), s=st.integers(1, 16))
+def test_rope_preserves_norm(b, s):
+    from repro.models.common import apply_rope
+    x = jax.random.normal(jax.random.key(b * 31 + s), (b, s, 2, 16))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    y = apply_rope(x, pos)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-4)
