@@ -6,17 +6,19 @@ Prints ``name,us_per_call,derived`` CSV:
 - bench_easgd    -> §4 async (EASGD overhead / tau)
 - bench_loading  -> §3.3 Alg 1 (parallel loading)
 - bench_kernels  -> kernel micro-bench
+- bench_dist     -> sharding spec construction (repro.dist) on the largest
+                    config; must stay off the compile hot path
 """
 import sys
 import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_comm, bench_easgd, bench_kernels,
-                            bench_loading, bench_scaling)
+    from benchmarks import (bench_comm, bench_dist, bench_easgd,
+                            bench_kernels, bench_loading, bench_scaling)
     modules = [("comm", bench_comm), ("scaling", bench_scaling),
                ("easgd", bench_easgd), ("loading", bench_loading),
-               ("kernels", bench_kernels)]
+               ("kernels", bench_kernels), ("dist", bench_dist)]
     print("name,us_per_call,derived")
     failed = []
     for name, mod in modules:

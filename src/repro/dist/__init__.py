@@ -1,0 +1,17 @@
+"""repro.dist — the distribution layer: sharding specs, activation
+constraints, and mesh-aware placement for every train/serve path.
+
+- ``repro.dist.sharding``: param/state/batch/cache spec rules + sanitizer
+- ``repro.dist.act``:      sequence-parallel activation constraints
+"""
+from repro.dist import act, sharding
+from repro.dist.sharding import (MODEL_AXIS, batch_shardings, cache_shardings,
+                                 dp_axes_of, dp_size_of, param_shardings,
+                                 param_spec, sanitize_spec,
+                                 set_replicate_attn, state_shardings)
+
+__all__ = [
+    "MODEL_AXIS", "act", "sharding", "batch_shardings", "cache_shardings",
+    "dp_axes_of", "dp_size_of", "param_shardings", "param_spec",
+    "sanitize_spec", "set_replicate_attn", "state_shardings",
+]

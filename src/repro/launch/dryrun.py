@@ -1,15 +1,17 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (arch x input-shape) on the
 production meshes and record memory/cost/collective analysis.
 
     PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
         --shape train_4k --mesh single --exchanger asa --out experiments/dryrun
 
-The XLA_FLAGS line above MUST run before any jax import (device count locks
-on first init); do not import this module from processes that need 1 device.
+The XLA_FLAGS assignment below MUST run before jax initializes a backend
+(the host device count locks at first backend init, not at import — merely
+importing jax, as ``repro/__init__``'s compat shims do, is safe; touching
+``jax.devices()`` earlier is not). Do not import this module from processes
+that need 1 device.
 """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
 import json

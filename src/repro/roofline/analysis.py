@@ -116,6 +116,8 @@ class Roofline:
 def analyze(compiled, *, model_flops_per_device: float = 0.0) -> dict:
     """Full analysis of one compiled executable."""
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):    # jax 0.4.x: list of per-program dicts
+        ca = ca[0] if ca else {}
     flops = float(ca.get("flops", 0.0))
     hbm = float(ca.get("bytes accessed", 0.0))
     txt = compiled.as_text()

@@ -1,0 +1,13 @@
+"""Test-support utilities (no runtime dependencies on the training stack)."""
+from __future__ import annotations
+
+
+class FakeMesh:
+    """axis_names/shape-only mesh stand-in for spec logic (sanitize_spec /
+    param_spec read nothing else), so production mesh shapes — 16x16,
+    2x16x16 — can be exercised without allocating devices."""
+
+    def __init__(self, axes: dict):
+        self.axis_names = tuple(axes)
+        self.shape = dict(axes)
+

@@ -1,0 +1,89 @@
+"""Deterministic fallback for the tiny subset of the ``hypothesis`` API the
+test suite uses (``given``/``settings``/``strategies``), for containers where
+hypothesis is not installed (this repo cannot assume extra deps; CI installs
+the real thing and takes precedence via the try/except import in the tests).
+
+Unlike hypothesis there is no shrinking or example database — each strategy
+draws from a PRNG seeded by the test's qualified name, always including the
+boundary values, so runs are reproducible and failures re-fire on re-run.
+"""
+from __future__ import annotations
+
+import random
+
+_DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, sampler):
+        self._sampler = sampler
+
+    def sample(self, rng: random.Random):
+        return self._sampler(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        def s(rng):
+            r = rng.random()
+            if r < 0.15:
+                return min_value
+            if r < 0.3:
+                return max_value
+            return rng.randint(min_value, max_value)
+        return _Strategy(s)
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, **_) -> _Strategy:
+        def s(rng):
+            r = rng.random()
+            if r < 0.15:
+                return min_value
+            if r < 0.3:
+                return max_value
+            return min_value + (max_value - min_value) * rng.random()
+        return _Strategy(s)
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        vals = list(elements)
+        return _Strategy(lambda rng: vals[rng.randrange(len(vals))])
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+st = _Strategies()
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, **_):
+    """Records max_examples on the (already ``given``-wrapped) test fn."""
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies):
+    """Kwargs-form ``@given``: runs the test over deterministic draws."""
+    def deco(fn):
+        # NOT functools.wraps: pytest follows __wrapped__ to the original
+        # signature and would treat the strategy params as fixtures.
+        def wrapper(*args, **kw):
+            # read from the wrapper (@settings outside @given) or from the
+            # wrapped fn (@settings inside @given) — hypothesis allows both
+            n = getattr(wrapper, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples",
+                                _DEFAULT_EXAMPLES))
+            rng = random.Random(fn.__qualname__)
+            for _ in range(n):
+                example = {k: s.sample(rng) for k, s in strategies.items()}
+                fn(*args, **example, **kw)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__qualname__ = fn.__qualname__
+        return wrapper
+    return deco

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # no hypothesis in this env: deterministic fallback
+    from repro.testing.hypofallback import given, settings, st
 
 from repro.kernels import ops, ref
 from repro.kernels.chunk_sum import chunk_sum as raw_chunk_sum

@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # no hypothesis in this env: deterministic fallback
+    from repro.testing.hypofallback import given, settings, st
 
 from repro.models.common import softmax_xent
 from repro.models.ssm import _segsum, ssd_chunked, ssd_naive
