@@ -1,34 +1,73 @@
 """Benchmark driver — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV:
-- bench_comm     -> Fig 3 / Table 3 (exchange strategies)
+- bench_comm     -> Fig 3 / Table 3 (exchange strategies + fused
+                    RS->update->AG step pipelines)
+- bench_overlap  -> §3.2 overlap: exposed comm, overlapped vs serialized
 - bench_scaling  -> Table 1 (speedup vs #workers)
 - bench_easgd    -> §4 async (EASGD overhead / tau)
 - bench_loading  -> §3.3 Alg 1 (parallel loading)
 - bench_kernels  -> kernel micro-bench
 - bench_dist     -> sharding spec construction (repro.dist) on the largest
                     config; must stay off the compile hot path
+
+``--quick`` runs the CI smoke subset (bench_comm + bench_overlap at
+reduced scale); ``--json PATH`` additionally writes the rows as JSON so
+the perf trajectory accumulates as artifacts (``BENCH_*.json``).
 """
+import argparse
+import inspect
+import json
+import os
 import sys
 import traceback
 
+# `python benchmarks/run.py` puts benchmarks/ (not the repo root) on
+# sys.path; the repo root is needed for `from benchmarks import ...`
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke subset: bench_comm + bench_overlap "
+                         "at reduced scale")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON (perf-trajectory "
+                         "artifact)")
+    args = ap.parse_args()
+
     from benchmarks import (bench_comm, bench_dist, bench_easgd,
-                            bench_kernels, bench_loading, bench_scaling)
-    modules = [("comm", bench_comm), ("scaling", bench_scaling),
-               ("easgd", bench_easgd), ("loading", bench_loading),
-               ("kernels", bench_kernels), ("dist", bench_dist)]
+                            bench_kernels, bench_loading, bench_overlap,
+                            bench_scaling)
+    if args.quick:
+        modules = [("comm", bench_comm), ("overlap", bench_overlap)]
+    else:
+        modules = [("comm", bench_comm), ("overlap", bench_overlap),
+                   ("scaling", bench_scaling), ("easgd", bench_easgd),
+                   ("loading", bench_loading), ("kernels", bench_kernels),
+                   ("dist", bench_dist)]
     print("name,us_per_call,derived")
-    failed = []
+    failed, rows = [], []
     for name, mod in modules:
         try:
-            for row_name, us, derived in mod.run():
+            kw = ({"quick": True} if args.quick and
+                  "quick" in inspect.signature(mod.run).parameters else {})
+            for row_name, us, derived in mod.run(**kw):
+                rows.append({"name": row_name, "us_per_call": us,
+                             "derived": derived})
                 print(f"{row_name},{us:.1f},{derived}", flush=True)
         except Exception as e:  # noqa: BLE001
             failed.append(name)
+            rows.append({"name": f"{name}/ERROR", "us_per_call": 0,
+                         "derived": f"{type(e).__name__}:{e}"})
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"quick": args.quick, "rows": rows}, f, indent=1)
     if failed:
         sys.exit(1)
 

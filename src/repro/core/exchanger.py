@@ -17,19 +17,41 @@ mesh axes, leaving any model-parallel axes to GSPMD ("auto" axes):
               reduce-scatter, cross-pod (DCN) allreduce of the 1/k shard,
               intra-pod all-gather. The TPU analogue of the paper's
               "QPI-aware" staging concern.
+- ``none``  : identity (benchmark baseline: isolates compute from exchange)
 
-All strategies split each gradient leaf along **axis 0** (padding as needed)
-so that model-parallel shardings on other axes are untouched.
+Every strategy is split into composable **halves**:
 
-Every strategy computes the *mean* over the data axis and is numerically
+    reduce_scatter(grads) -> 1/k shard     all_gather(shard) -> full tree
+
+and ``exchange`` is their composition (``ar`` keeps the single fused
+``psum`` so the MPI_Allreduce baseline of the paper's Table 3 stays one
+collective; its halves are ``psum_scatter``/``all_gather``). The split is
+what lets the optimizer update only the local shard between the halves
+(ZeRO-1-style RS -> update -> AG, see ``core/bsp.py``): the full reduced
+gradient is never materialized and the fp16/int8 wire precision applies to
+both directions (gradients in, updated parameters out).
+
+Leaves are packed into flat fp32 **buckets** (``make_rs_plan``): one bucket
+per leaf by default, or DDP-style multi-leaf buckets of up to
+``bucket_bytes``. Leaves smaller than ``_SMALL_LEAF`` elements are psum'd
+whole and updated replicated — chunking overhead dominates there.
+
+NOTE: flattening assumes gradient leaves are *replicated* over any
+model-parallel mesh axes inside the shard_map body — the invariant the
+BSP path maintains (``repro.dist.state_shardings`` replicates train state;
+on jax 0.4.x shard_map is fully manual, see ``repro/_compat.py``). Under
+a future partial-auto shard_map with model-sharded gradient leaves, the
+reshape/concat would force GSPMD to regather each leaf — the GSPMD/ZeRO-1
+path (``core/gspmd.py``) is the right tool there, not this module.
+
+Every strategy computes the *mean* over the data axes and is numerically
 interchangeable (up to its transfer precision) — property-tested in
-``tests/test_exchangers.py``.
+``tests/test_exchangers.py`` / ``tests/test_rs_update.py``.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +66,16 @@ def _axis_size(axis) -> int:
     if isinstance(axis, (tuple, list)):
         return int(np.prod([jax.lax.axis_size(a) for a in axis]))
     return jax.lax.axis_size(axis)
+
+
+def _split_axes(axis):
+    """(lead_axes, rs_axis): the reduce-scatter/all-gather legs run over the
+    *last* axis (intra-pod ICI); any leading axes (cross-pod DCN) see only a
+    psum of the 1/k shard."""
+    if isinstance(axis, (tuple, list)):
+        axes = tuple(axis)
+        return axes[:-1], axes[-1]
+    return (), axis
 
 
 def _pad_to(g, k: int):
@@ -63,155 +95,206 @@ def default_chunk_sum(chunks):
 
 
 # ---------------------------------------------------------------------------
-# strategies (per-leaf, inside shard_map)
+# bucket plan: the static layout shared by RS, update, and AG
 # ---------------------------------------------------------------------------
 
-def ar_leaf(g, axis, **_):
-    """MPI_Allreduce analogue."""
-    k = _axis_size(axis)
-    return (jax.lax.psum(g.astype(jnp.float32), axis) / k).astype(g.dtype)
+@dataclass(frozen=True)
+class BucketSpec:
+    """One flat fp32 bucket: which leaves it packs and its padded extent."""
+    leaves: tuple[int, ...]      # leaf indices (tree.flatten order)
+    sizes: tuple[int, ...]       # flat element counts, same order
+    shard_len: int               # per-rank shard extent
+    padded: int                  # k * shard_len
 
 
-def asa_leaf(g, axis, transfer_dtype=None, sum_fn=default_chunk_sum, **_):
-    """Alltoall -> local sum (fp32) -> Allgather.  Paper Fig 2.
+@dataclass(frozen=True)
+class RSPlan:
+    """Static reduce-scatter plan for one gradient/parameter pytree.
 
-    ``transfer_dtype``: dtype used on the wire (fp16/bf16/int8 variants);
-    summation always accumulates in fp32 (paper: "transfer of parameters at
-    half-precision while summing them at full precision").
-    """
-    if isinstance(axis, (tuple, list)) and len(axis) == 1:
-        axis = axis[0]
-    if isinstance(axis, (tuple, list)):
-        # multi-axis (pod,data): treat hierarchically
-        return hier_leaf(g, axis, transfer_dtype=transfer_dtype,
-                         sum_fn=sum_fn)
-    k = jax.lax.axis_size(axis)
-    dtype = g.dtype
-    if g.size <= _SMALL_LEAF:
-        return ar_leaf(g, axis)
-    shape0 = g.shape
-    if g.shape[0] < k:
-        # leading dim too short to chunk (e.g. stacked-layer leaves at very
-        # wide DP): chunk the flattened view instead. NOTE: only reached in
-        # practice on pure-DP meshes; with model-parallel leaves dim0 (layer
-        # stack) >= data-axis size on the production meshes.
-        g = g.reshape(-1)
-    gp, n = _pad_to(g, k)
-    chunks = gp.reshape(k, -1, *gp.shape[1:])
+    Derived deterministically from (leaf shapes, k, bucket_bytes) so the
+    optimizer-state layout built at init time and the step built at trace
+    time always agree."""
+    k: int                       # rs-axis worker count (shard denominator)
+    buckets: tuple[BucketSpec, ...]
+    small: tuple[int, ...]       # leaf indices exchanged whole (psum)
+    treedef: Any
+    shapes: tuple
+    dtypes: tuple
 
+    @property
+    def num_buckets(self) -> int:
+        return len(self.buckets)
+
+
+def _leaf_size(leaf) -> int:
+    return int(np.prod(leaf.shape)) if leaf.shape else 1
+
+
+def make_rs_plan(tree, k: int, bucket_bytes: int = 0,
+                 small_leaf: int = _SMALL_LEAF) -> RSPlan:
+    """Pack a pytree's leaves into reduce-scatter buckets.
+
+    ``tree`` may hold arrays or ``ShapeDtypeStruct``s (the plan only reads
+    shapes/dtypes). ``bucket_bytes=0`` gives one bucket per big leaf;
+    ``bucket_bytes>0`` greedily packs consecutive big leaves into flat fp32
+    buckets of up to that size (fewer, larger collectives)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+    small, groups, cur, cur_b = [], [], [], 0
+    for i, l in enumerate(leaves):
+        n = _leaf_size(l)
+        if n <= small_leaf:
+            small.append(i)
+            continue
+        if bucket_bytes and cur and cur_b + n * 4 > bucket_bytes:
+            groups.append(cur)
+            cur, cur_b = [], 0
+        cur.append(i)
+        cur_b += n * 4
+        if not bucket_bytes:
+            groups.append(cur)
+            cur, cur_b = [], 0
+    if cur:
+        groups.append(cur)
+    buckets = []
+    for g in groups:
+        sizes = tuple(_leaf_size(leaves[i]) for i in g)
+        total = sum(sizes)
+        shard_len = -(-total // k)
+        buckets.append(BucketSpec(tuple(g), sizes, shard_len, shard_len * k))
+    return RSPlan(k, tuple(buckets), tuple(small), treedef, shapes, dtypes)
+
+
+# ---------------------------------------------------------------------------
+# per-bucket halves on flat fp32 arrays (inside shard_map)
+# ---------------------------------------------------------------------------
+
+def _quant_rows(cf):
+    """Per-row absmax int8 quantization: (k, s) fp32 -> (q int8, scale (k,1))."""
+    scale = jnp.max(jnp.abs(cf), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(cf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _rs_ar(flat, axes, inv_k, sum_fn, transfer_dtype):
+    """psum_scatter over the rs axis (+ psum over lead axes): true HLO
+    reduce-scatter, fp32 on the wire."""
+    lead, ax = _split_axes(axes)
+    s = jax.lax.psum_scatter(flat, ax, scatter_dimension=0, tiled=True)
+    if lead:
+        s = jax.lax.psum(s, tuple(lead))
+    return s * inv_k
+
+
+def _rs_asa(flat, axes, inv_k, sum_fn, transfer_dtype):
+    """Alltoall -> local fp32 sum (paper Fig 2), optional lead-axes psum of
+    the 1/k shard (the hierarchical/DCN leg)."""
+    lead, ax = _split_axes(axes)
+    k = jax.lax.axis_size(ax)
+    chunks = flat.reshape(k, -1)
+    if transfer_dtype == jnp.int8 and lead:
+        transfer_dtype = jnp.float16   # int8 scaling not plumbed across pods
     if transfer_dtype == jnp.int8:
-        out = _asa_int8(chunks, g, n, k, axis, sum_fn, dtype)
-        return out.reshape(shape0)
+        q, scale = _quant_rows(chunks)
+        recv = jax.lax.all_to_all(q, ax, split_axis=0, concat_axis=0)
+        rscale = jax.lax.all_to_all(scale, ax, split_axis=0, concat_axis=0)
+        s = jnp.sum(recv.astype(jnp.float32) * rscale, axis=0)
+    else:
+        if transfer_dtype is not None:
+            chunks = chunks.astype(transfer_dtype)
+        recv = jax.lax.all_to_all(chunks, ax, split_axis=0, concat_axis=0)
+        s = sum_fn(recv)
+    if lead:
+        s = jax.lax.psum(s, tuple(lead))
+    return s * inv_k
 
+
+def _rs_asa_raw(flat, axes, sum_fn, transfer_dtype):
+    """Transfer-only RS half: the received per-rank chunks BEFORE summation,
+    so a fused kernel can do dequant + fp32 sum + update in one VMEM pass.
+
+    Returns ``(recv (k, s) wire-dtype, scales (k, 1) | None)``; the caller
+    owns the mean divisor. Single-axis only."""
+    lead, ax = _split_axes(axes)
+    assert not lead, "raw reduce-scatter is single-axis (intra-pod) only"
+    k = jax.lax.axis_size(ax)
+    chunks = flat.reshape(k, -1)
+    if transfer_dtype == jnp.int8:
+        q, scale = _quant_rows(chunks)
+        recv = jax.lax.all_to_all(q, ax, split_axis=0, concat_axis=0)
+        rscale = jax.lax.all_to_all(scale, ax, split_axis=0, concat_axis=0)
+        return recv, rscale
     if transfer_dtype is not None:
         chunks = chunks.astype(transfer_dtype)
-    # transfer: scatter chunk i to rank i
-    recv = jax.lax.all_to_all(chunks, axis, split_axis=0, concat_axis=0,
-                              tiled=False)
-    # arithmetic: local summation at full precision (the paper's GPU kernel)
-    s = sum_fn(recv) / k                                  # fp32
-    if transfer_dtype is not None:
-        s = s.astype(transfer_dtype)
-    out = jax.lax.all_gather(s, axis, axis=0, tiled=True)
-    out = out.reshape(gp.shape)[:n] if out.shape[0] != n else out
-    return out.astype(dtype).reshape(shape0)
+    recv = jax.lax.all_to_all(chunks, ax, split_axis=0, concat_axis=0)
+    return recv, None
 
 
-def _asa_int8(chunks, g, n, k, axis, sum_fn, dtype):
-    """int8 transfer with one fp32 scale per (rank-)chunk."""
-    cf = chunks.astype(jnp.float32)
-    scale = jnp.max(jnp.abs(cf), axis=tuple(range(1, cf.ndim)),
-                    keepdims=True) / 127.0 + 1e-12        # (k,1,..)
-    q = jnp.clip(jnp.round(cf / scale), -127, 127).astype(jnp.int8)
-    recv = jax.lax.all_to_all(q, axis, split_axis=0, concat_axis=0)
-    rscale = jax.lax.all_to_all(scale, axis, split_axis=0, concat_axis=0)
-    deq = recv.astype(jnp.float32) * rscale
-    s = jnp.sum(deq, axis=0) / k                          # fp32 (1/k,...)
-    # requantize the reduced shard for the gather leg
-    s_scale = jnp.max(jnp.abs(s)) / 127.0 + 1e-12
-    sq = jnp.clip(jnp.round(s / s_scale), -127, 127).astype(jnp.int8)
-    out_q = jax.lax.all_gather(sq, axis, axis=0, tiled=True)
-    out_s = jax.lax.all_gather(s_scale[None], axis, axis=0, tiled=True)
-    c = out_q.shape[0] // k
-    out = out_q.astype(jnp.float32) * jnp.repeat(out_s, c, axis=0).reshape(
-        (-1,) + (1,) * (out_q.ndim - 1))
-    out = out.reshape(k * c, *out_q.shape[1:])[:n]
-    return out.astype(dtype)
-
-
-def ring_leaf(g, axis, transfer_dtype=None, **_):
-    """Ring reduce-scatter + ring all-gather via collective_permute."""
-    if isinstance(axis, (tuple, list)):
-        if len(axis) == 1:
-            axis = axis[0]
-        else:
-            return hier_leaf(g, axis, transfer_dtype=transfer_dtype,
-                             inner=ring_leaf)
-    k = jax.lax.axis_size(axis)
-    dtype = g.dtype
-    if g.size <= _SMALL_LEAF or g.shape[0] < k or k == 1:
-        return ar_leaf(g, axis)
-    gp, n = _pad_to(g, k)
-    x = gp.reshape(k, -1, *gp.shape[1:]).astype(jnp.float32)
-    idx = jax.lax.axis_index(axis)
+def _rs_ring(flat, axes, inv_k, sum_fn, transfer_dtype):
+    """Ring reduce-scatter via collective_permute; rank i ends holding
+    chunk i fully reduced (aligned with the AG/update shard layout)."""
+    lead, ax = _split_axes(axes)
+    if lead:   # cross-pod: stage hierarchically like asa/hier
+        return _rs_asa(flat, axes, inv_k, sum_fn, transfer_dtype)
+    k = jax.lax.axis_size(ax)
+    if k == 1:
+        return flat * inv_k
+    x = flat.reshape(k, -1)
+    idx = jax.lax.axis_index(ax)
     fwd = [(i, (i + 1) % k) for i in range(k)]
-
-    # ring reduce-scatter (textbook): at step s rank i sends its partial of
-    # chunk (i-s)%k and receives chunk (i-s-1)%k, adding its local copy.
-    # After k-1 steps rank i holds chunk (i+1)%k fully reduced.
-    acc = jnp.take(x, idx % k, axis=0)
+    # at step s rank i sends its partial of chunk (i-s-1)%k and receives
+    # chunk (i-s-2)%k, adding its local copy; after k-1 steps rank i holds
+    # chunk i fully reduced.
+    acc = jnp.take(x, (idx - 1) % k, axis=0)
     for s in range(k - 1):
         acc_t = acc.astype(transfer_dtype) if transfer_dtype is not None else acc
-        recv = jax.lax.ppermute(acc_t, axis, fwd).astype(jnp.float32)
-        acc = recv + jnp.take(x, (idx - s - 1) % k, axis=0)
-    acc = acc / k
+        recv = jax.lax.ppermute(acc_t, ax, fwd).astype(jnp.float32)
+        acc = recv + jnp.take(x, (idx - s - 2) % k, axis=0)
+    return acc * inv_k
 
-    # ring all-gather: after s permutes rank i holds rank (i-s)'s chunk,
-    # i.e. chunk (i-s+1)%k.
-    buf = jnp.zeros_like(x)
-    cur = acc
-    buf = jax.lax.dynamic_update_index_in_dim(buf, cur, (idx + 1) % k, axis=0)
+
+def _ag_ring(shard, axes, transfer_dtype):
+    """Ring all-gather: after s permutes rank i holds rank (i-s)'s chunk."""
+    lead, ax = _split_axes(axes)
+    if lead:
+        return _ag_flat(shard, axes, transfer_dtype)
+    k = jax.lax.axis_size(ax)
+    if k == 1:
+        return shard
+    idx = jax.lax.axis_index(ax)
+    fwd = [(i, (i + 1) % k) for i in range(k)]
+    buf = jnp.zeros((k, shard.shape[0]), jnp.float32)
+    cur = shard
+    buf = jax.lax.dynamic_update_index_in_dim(buf, cur, idx, axis=0)
     for s in range(1, k):
         cur_t = cur.astype(transfer_dtype) if transfer_dtype is not None else cur
-        cur = jax.lax.ppermute(cur_t, axis, fwd).astype(jnp.float32)
-        buf = jax.lax.dynamic_update_index_in_dim(
-            buf, cur, (idx - s + 1) % k, axis=0)
-    out = buf.reshape(gp.shape)[:n]
-    return out.astype(dtype)
+        cur = jax.lax.ppermute(cur_t, ax, fwd).astype(jnp.float32)
+        buf = jax.lax.dynamic_update_index_in_dim(buf, cur, (idx - s) % k,
+                                                  axis=0)
+    return buf.reshape(-1)
 
 
-def hier_leaf(g, axis, transfer_dtype=None, sum_fn=default_chunk_sum,
-              inner=None, **_):
-    axes = axis
-    """Pod-hierarchical exchange over ('pod', 'data').
-
-    intra-pod reduce-scatter (ICI) -> cross-pod allreduce of the shard
-    (DCN, 1/k_data of the bytes) -> intra-pod all-gather.
-    """
-    if not isinstance(axes, (tuple, list)) or len(axes) == 1:
-        ax = axes[0] if isinstance(axes, (tuple, list)) else axes
-        return asa_leaf(g, ax, transfer_dtype=transfer_dtype, sum_fn=sum_fn)
-    pod_axis, data_axis = axes[0], axes[-1]
-    k = jax.lax.axis_size(data_axis)
-    kp = jax.lax.axis_size(pod_axis)
-    dtype = g.dtype
-    if g.size <= _SMALL_LEAF or g.shape[0] < k:
-        return ar_leaf(g, tuple(axes))
+def _ag_flat(shard, axes, transfer_dtype):
+    """All-gather the (s,) fp32 shard back to (k*s,) over the rs axis, at
+    the wire dtype (int8 requantizes with one fp32 scale per shard)."""
+    lead, ax = _split_axes(axes)
+    del lead   # lead axes already hold identical shards (post cross-pod psum)
     if transfer_dtype == jnp.int8:
-        transfer_dtype = jnp.float16  # int8 scaling not plumbed across pods
-    gp, n = _pad_to(g, k)
-    chunks = gp.reshape(k, -1, *gp.shape[1:])
+        scale = jnp.max(jnp.abs(shard)) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(shard / scale), -127, 127).astype(jnp.int8)
+        out_q = jax.lax.all_gather(q, ax, axis=0, tiled=True)
+        out_s = jax.lax.all_gather(scale[None], ax, axis=0, tiled=True)
+        s_len = shard.shape[0]
+        return out_q.astype(jnp.float32) * jnp.repeat(out_s, s_len, axis=0)
     if transfer_dtype is not None:
-        chunks = chunks.astype(transfer_dtype)
-    recv = jax.lax.all_to_all(chunks, data_axis, split_axis=0, concat_axis=0)
-    s = sum_fn(recv)                                      # fp32 shard
-    # cross-pod: only 1/k of the gradient crosses the DCN
-    s = jax.lax.psum(s, pod_axis) / (k * kp)
-    if transfer_dtype is not None:
-        s = s.astype(transfer_dtype)
-    out = jax.lax.all_gather(s, data_axis, axis=0, tiled=True)
-    out = out.reshape(gp.shape)[:n]
-    return out.astype(dtype)
+        shard = shard.astype(transfer_dtype)
+    return jax.lax.all_gather(shard, ax, axis=0, tiled=True).astype(
+        jnp.float32)
+
+
+_RS_FNS = {"ar": _rs_ar, "asa": _rs_asa, "ring": _rs_ring}
+_AG_FNS = {"ar": _ag_flat, "asa": _ag_flat, "ring": _ag_ring}
 
 
 # ---------------------------------------------------------------------------
@@ -220,14 +303,109 @@ def hier_leaf(g, axis, transfer_dtype=None, sum_fn=default_chunk_sum,
 
 @dataclass(frozen=True)
 class Exchanger:
-    """Named strategy applied leaf-wise to a gradient pytree."""
+    """Named strategy applied bucket-wise to a gradient pytree.
+
+    ``kind`` picks the collective family (``ar`` | ``asa`` | ``ring`` |
+    ``none``); ``hier`` is the ``asa`` family over a ('pod', 'data') axis
+    tuple. ``transfer_dtype`` is the wire format of both halves."""
     name: str
-    leaf_fn: Callable
+    kind: str
     transfer_dtype: object = None
+
+    # -- plan / packing helpers (static) ----------------------------------
+
+    def plan_for(self, tree, axis_or_k, bucket_bytes: int = 0) -> RSPlan:
+        k = axis_or_k if isinstance(axis_or_k, int) else _axis_size(
+            _split_axes(axis_or_k)[1])
+        return make_rs_plan(tree, k, bucket_bytes)
+
+    @staticmethod
+    def pack(tree, plan: RSPlan):
+        """-> (flat fp32 padded bucket list, small-leaf list, leaves)."""
+        leaves = jax.tree.flatten(tree)[0]
+        flats = []
+        for b in plan.buckets:
+            f = jnp.concatenate(
+                [leaves[i].reshape(-1).astype(jnp.float32) for i in b.leaves])
+            pad = b.padded - f.shape[0]
+            if pad:
+                f = jnp.pad(f, (0, pad))
+            flats.append(f)
+        return flats, [leaves[i] for i in plan.small], leaves
+
+    @staticmethod
+    def unpack(flats, smalls, plan: RSPlan):
+        """Inverse of ``pack``: rebuild the pytree at original shapes/dtypes."""
+        out = [None] * len(plan.shapes)
+        for b, f in zip(plan.buckets, flats):
+            off = 0
+            for i, n in zip(b.leaves, b.sizes):
+                out[i] = f[off:off + n].reshape(plan.shapes[i]).astype(
+                    plan.dtypes[i])
+                off += n
+        for i, s in zip(plan.small, smalls):
+            out[i] = s.astype(plan.dtypes[i]).reshape(plan.shapes[i])
+        return jax.tree.unflatten(plan.treedef, out)
+
+    # -- the halves (inside shard_map) ------------------------------------
+
+    def reduce_scatter(self, grads, axis, *, sum_fn=default_chunk_sum,
+                       bucket_bytes: int = 0, plan: RSPlan | None = None,
+                       raw: bool = False):
+        """Mean-reduce and scatter: each rank keeps the fp32 shard of every
+        bucket plus the fully psum'd small leaves.
+
+        Returns ``({"shards", "full"}, plan)`` — or with ``raw=True`` (asa
+        family only) ``{"chunks", "scales", "full"}`` where chunks are the
+        un-summed per-rank receives for the fused RS+update kernel."""
+        if self.kind == "none":
+            raise ValueError("'none' exchanger has no reduce_scatter half")
+        if plan is None:
+            plan = self.plan_for(grads, axis, bucket_bytes)
+        inv_k = 1.0 / _axis_size(axis)
+        flats, smalls, _ = self.pack(grads, plan)
+        full = [jax.lax.psum(s.astype(jnp.float32), axis) * inv_k
+                for s in smalls]
+        if raw:
+            if not self.supports_raw:
+                raise ValueError(
+                    f"raw reduce-scatter unsupported for {self.name!r}")
+            pairs = [_rs_asa_raw(f, axis, sum_fn, self.transfer_dtype)
+                     for f in flats]
+            return {"chunks": [p[0] for p in pairs],
+                    "scales": [p[1] for p in pairs if p[1] is not None],
+                    "full": full}, plan
+        rs = _RS_FNS[self.kind]
+        shards = [rs(f, axis, inv_k, sum_fn, self.transfer_dtype)
+                  for f in flats]
+        return {"shards": shards, "full": full}, plan
+
+    def all_gather(self, shards, plan: RSPlan, axis, *,
+                   wire_dtype=...):
+        """Gather (s,) fp32 shards back to (k*s,) flat buckets at the wire
+        dtype. ``wire_dtype`` overrides the strategy's transfer dtype (e.g.
+        fp32 parameter gathers, or int8 strategies gathering params at
+        fp16)."""
+        if wire_dtype is ...:
+            wire_dtype = self.transfer_dtype
+        ag = _AG_FNS[self.kind]
+        return [ag(s, axis, wire_dtype) for s in shards]
+
+    @property
+    def supports_raw(self) -> bool:
+        """Whether reduce_scatter(raw=True) can hand un-summed chunks to the
+        fused RS+update kernel (single-axis alltoall family)."""
+        return self.kind == "asa"
+
+    # -- full exchange (composition of the halves) ------------------------
 
     def exchange(self, grads, axis, sum_fn=default_chunk_sum,
                  bucket_bytes: int = 0):
         """Mean-reduce ``grads`` across ``axis`` (str or tuple of axes).
+
+        Composition of ``reduce_scatter`` and ``all_gather``; ``ar`` keeps
+        the single fused ``psum`` per bucket so the MPI_Allreduce baseline
+        stays one collective (XLA lowers it to RS+AG internally anyway).
 
         ``bucket_bytes`` > 0 packs leaves into flat fp32 buckets of up to
         that size before exchanging (DDP-style bucketing: fewer, larger
@@ -235,46 +413,33 @@ class Exchanger:
         for data-parallel-only setups: flattening would destroy
         model-parallel shardings.
         """
-        fn = functools.partial(self.leaf_fn, axis=axis,
-                               transfer_dtype=self.transfer_dtype,
-                               sum_fn=sum_fn)
-        if not bucket_bytes:
-            return jax.tree.map(fn, grads)
-        leaves, treedef = jax.tree.flatten(grads)
-        flats = [l.astype(jnp.float32).reshape(-1) for l in leaves]
-        buckets, cur, cur_b = [], [], 0
-        for i, f in enumerate(flats):
-            if cur and cur_b + f.size * 4 > bucket_bytes:
-                buckets.append(cur)
-                cur, cur_b = [], 0
-            cur.append(i)
-            cur_b += f.size * 4
-        if cur:
-            buckets.append(cur)
-        out_flats = [None] * len(flats)
-        for idxs in buckets:
-            packed = jnp.concatenate([flats[i] for i in idxs])
-            red = fn(packed)
-            off = 0
-            for i in idxs:
-                n = flats[i].size
-                out_flats[i] = red[off:off + n]
-                off += n
-        outs = [of.reshape(l.shape).astype(l.dtype)
-                for of, l in zip(out_flats, leaves)]
-        return jax.tree.unflatten(treedef, outs)
+        if self.kind == "none":
+            return grads
+        plan = self.plan_for(grads, axis, bucket_bytes)
+        if self.kind == "ar":
+            inv_k = 1.0 / _axis_size(axis)
+            flats, smalls, _ = self.pack(grads, plan)
+            red = [jax.lax.psum(f, axis) * inv_k for f in flats]
+            full = [jax.lax.psum(s.astype(jnp.float32), axis) * inv_k
+                    for s in smalls]
+            return self.unpack(red, full, plan)
+        res, plan = self.reduce_scatter(grads, axis, sum_fn=sum_fn,
+                                        plan=plan)
+        flats = self.all_gather(res["shards"], plan, axis)
+        return self.unpack(flats, res["full"], plan)
 
 
 EXCHANGERS: dict[str, Exchanger] = {
-    "ar": Exchanger("ar", ar_leaf),
-    "asa": Exchanger("asa", asa_leaf),
-    "asa16": Exchanger("asa16", asa_leaf, jnp.float16),
-    "asabf16": Exchanger("asabf16", asa_leaf, jnp.bfloat16),
-    "asa8": Exchanger("asa8", asa_leaf, jnp.int8),
-    "ring": Exchanger("ring", ring_leaf),
-    "ring16": Exchanger("ring16", ring_leaf, jnp.float16),
-    "hier": Exchanger("hier", hier_leaf),
-    "hier16": Exchanger("hier16", hier_leaf, jnp.float16),
+    "ar": Exchanger("ar", "ar"),
+    "asa": Exchanger("asa", "asa"),
+    "asa16": Exchanger("asa16", "asa", jnp.float16),
+    "asabf16": Exchanger("asabf16", "asa", jnp.bfloat16),
+    "asa8": Exchanger("asa8", "asa", jnp.int8),
+    "ring": Exchanger("ring", "ring"),
+    "ring16": Exchanger("ring16", "ring", jnp.float16),
+    "hier": Exchanger("hier", "asa"),
+    "hier16": Exchanger("hier16", "asa", jnp.float16),
+    "none": Exchanger("none", "none"),
 }
 
 
@@ -282,3 +447,13 @@ def get_exchanger(name: str) -> Exchanger:
     if name not in EXCHANGERS:
         raise KeyError(f"unknown exchanger {name!r}; known: {sorted(EXCHANGERS)}")
     return EXCHANGERS[name]
+
+
+def param_wire_dtype(exchanger: Exchanger):
+    """Wire format for the updated-parameter all-gather leg of the
+    RS->update->AG path: the strategy's transfer dtype, except int8
+    strategies gather params at fp16 (absmax-int8 on weights is too lossy
+    to re-apply every step)."""
+    if exchanger.transfer_dtype == jnp.int8:
+        return jnp.float16
+    return exchanger.transfer_dtype

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import resolve_interpret
 
 DEFAULT_BLOCK_N = 2048
 
@@ -33,12 +34,13 @@ def _chunk_sum_kernel(x_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def chunk_sum(chunks, *, block_n: int = DEFAULT_BLOCK_N,
-              interpret: bool = True):
+              interpret: bool | None = None):
     """Sum ``chunks`` (k, n) over axis 0 with fp32 accumulation -> (n,) f32.
 
-    ``interpret=True`` runs the kernel body in the Pallas interpreter (CPU
-    container); on TPU pass ``interpret=False``.
+    ``interpret=None`` auto-selects per backend: compiled on TPU, the
+    Pallas interpreter elsewhere (CPU containers).
     """
+    interpret = resolve_interpret(interpret)
     k, n = chunks.shape
     pad = (-n) % block_n
     if pad:

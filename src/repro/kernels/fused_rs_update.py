@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: fused reduce-scatter tail — dequant + fp32 chunk sum
++ momentum-SGD — on the local parameter shard in one VMEM pass.
+
+After the alltoall leg of the RS half, each rank holds ``k`` low-precision
+chunks of its shard. The unfused pipeline materializes the fp32 sum in HBM
+(``chunk_sum``), then re-reads it together with (p, m) for the update
+(``fused_sgd``). This kernel streams one (k, block_n) tile of receives plus
+the matching (p, m, wd_mask) blocks through VMEM and emits (p', m')
+directly:
+
+    g  = scale * sum_k dequant(recv[k])        (fp32 accumulation)
+    g += weight_decay * wd_mask * p
+    m' = mu * m + g
+    p' = p - lr * (g + mu * m')    (nesterov)
+       = p - lr * m'               (classic)
+
+``scale`` folds the data-parallel mean (1/k) and any microbatch-accumulation
+mean (1/m) into the same pass. The int8 variant takes one fp32 scale per
+rank chunk (the wire format of ``asa8``) and dequantizes in-register.
+
+Parity-tested against ``default_chunk_sum`` + ``fused_sgd`` in
+``tests/test_kernels.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import resolve_interpret
+
+DEFAULT_BLOCK_N = 2048
+
+
+def _update_tail(r, p_ref, m_ref, mask_ref, lr_ref, po_ref, mo_ref, *,
+                 momentum, nesterov, scale, weight_decay):
+    """Shared sum + momentum-SGD tail; ``r`` is the dequantized (k, bn)
+    receive tile (plain function — Pallas inlines it into both variants)."""
+    g = jnp.sum(r, axis=0) * scale
+    p = p_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    if weight_decay:
+        g = g + weight_decay * mask_ref[...] * p
+    lr = lr_ref[0]
+    m_new = momentum * m + g
+    step = g + momentum * m_new if nesterov else m_new
+    po_ref[...] = p - lr * step
+    mo_ref[...] = m_new
+
+
+def _kernel(recv_ref, p_ref, m_ref, mask_ref, lr_ref, po_ref, mo_ref,
+            **statics):
+    r = recv_ref[...].astype(jnp.float32)          # (k, block_n)
+    _update_tail(r, p_ref, m_ref, mask_ref, lr_ref, po_ref, mo_ref,
+                 **statics)
+
+
+def _kernel_q(recv_ref, scales_ref, p_ref, m_ref, mask_ref, lr_ref,
+              po_ref, mo_ref, **statics):
+    r = recv_ref[...].astype(jnp.float32) * scales_ref[...]   # (k,bn)*(k,1)
+    _update_tail(r, p_ref, m_ref, mask_ref, lr_ref, po_ref, mo_ref,
+                 **statics)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("momentum", "nesterov", "scale",
+                                    "weight_decay", "block_n", "interpret"))
+def fused_rs_update(recv, p, m, mask, lr, *, momentum: float = 0.9,
+                    nesterov: bool = False, scale: float = 1.0,
+                    weight_decay: float = 0.0, scales=None,
+                    block_n: int = DEFAULT_BLOCK_N,
+                    interpret: bool | None = None):
+    """recv: (k, n) float or int8 chunks; p/m/mask: (n,); scales: (k,) fp32
+    per-chunk dequant scales (int8 wire) or None -> (p', m') fp32 (n,)."""
+    interpret = resolve_interpret(interpret)
+    k, n = recv.shape
+    pad = (-n) % block_n
+    if pad:
+        recv = jnp.pad(recv, ((0, 0), (0, pad)))
+        p = jnp.pad(p, (0, pad))
+        m = jnp.pad(m, (0, pad))
+        mask = jnp.pad(mask, (0, pad))
+    lr_arr = jnp.asarray([lr], jnp.float32)
+    npad = n + pad
+    grid = (npad // block_n,)
+    vec = pl.BlockSpec((block_n,), lambda i: (i,))
+    common = dict(
+        grid=grid,
+        out_specs=[vec, vec],
+        out_shape=[jax.ShapeDtypeStruct((npad,), jnp.float32),
+                   jax.ShapeDtypeStruct((npad,), jnp.float32)],
+        interpret=interpret,
+    )
+    statics = dict(momentum=momentum, nesterov=nesterov, scale=scale,
+                   weight_decay=weight_decay)
+    if scales is None:
+        po, mo = pl.pallas_call(
+            functools.partial(_kernel, **statics),
+            in_specs=[pl.BlockSpec((k, block_n), lambda i: (0, i)),
+                      vec, vec, vec, pl.BlockSpec((1,), lambda i: (0,))],
+            **common,
+        )(recv, p, m, mask, lr_arr)
+    else:
+        po, mo = pl.pallas_call(
+            functools.partial(_kernel_q, **statics),
+            in_specs=[pl.BlockSpec((k, block_n), lambda i: (0, i)),
+                      pl.BlockSpec((k, 1), lambda i: (0, 0)),
+                      vec, vec, vec, pl.BlockSpec((1,), lambda i: (0,))],
+            **common,
+        )(recv, scales.reshape(k, 1).astype(jnp.float32), p, m, mask, lr_arr)
+    return po[:n], mo[:n]

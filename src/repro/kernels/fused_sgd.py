@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import resolve_interpret
 
 DEFAULT_BLOCK_N = 4096
 
@@ -36,8 +37,11 @@ def _fused_sgd_kernel(p_ref, g_ref, m_ref, lr_ref, po_ref, mo_ref, *,
                    static_argnames=("momentum", "nesterov", "block_n",
                                     "interpret"))
 def fused_sgd(p, g, m, lr, *, momentum: float = 0.9, nesterov: bool = False,
-              block_n: int = DEFAULT_BLOCK_N, interpret: bool = True):
-    """Flat fused update. p/g/m: (n,) -> (p', m') fp32."""
+              block_n: int = DEFAULT_BLOCK_N, interpret: bool | None = None):
+    """Flat fused update. p/g/m: (n,) -> (p', m') fp32.
+
+    ``interpret=None`` auto-selects per backend (compiled on TPU)."""
+    interpret = resolve_interpret(interpret)
     (n,) = p.shape
     pad = (-n) % block_n
     if pad:

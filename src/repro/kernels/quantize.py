@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import resolve_interpret
 
 DEFAULT_BLOCK_N = 2048
 
@@ -29,7 +30,9 @@ def _cast_kernel(dtype):
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def quant_fp16(x, *, block_n: int = DEFAULT_BLOCK_N, interpret: bool = True):
+def quant_fp16(x, *, block_n: int = DEFAULT_BLOCK_N,
+               interpret: bool | None = None):
+    interpret = resolve_interpret(interpret)
     (n,) = x.shape
     pad = (-n) % block_n
     xp = jnp.pad(x, (0, pad)) if pad else x
@@ -45,7 +48,9 @@ def quant_fp16(x, *, block_n: int = DEFAULT_BLOCK_N, interpret: bool = True):
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def dequant_fp16(x, *, block_n: int = DEFAULT_BLOCK_N, interpret: bool = True):
+def dequant_fp16(x, *, block_n: int = DEFAULT_BLOCK_N,
+                 interpret: bool | None = None):
+    interpret = resolve_interpret(interpret)
     (n,) = x.shape
     pad = (-n) % block_n
     xp = jnp.pad(x, (0, pad)) if pad else x
@@ -72,8 +77,10 @@ def _quant_int8_kernel(x_ref, q_ref, s_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def quant_int8(x, *, block_n: int = DEFAULT_BLOCK_N, interpret: bool = True):
+def quant_int8(x, *, block_n: int = DEFAULT_BLOCK_N,
+               interpret: bool | None = None):
     """x: (n,) float -> (q: (n,) int8, scales: (n_blocks,) fp32)."""
+    interpret = resolve_interpret(interpret)
     (n,) = x.shape
     pad = (-n) % block_n
     xp = jnp.pad(x, (0, pad)) if pad else x
@@ -97,7 +104,8 @@ def _dequant_int8_kernel(q_ref, s_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def dequant_int8(q, scales, *, block_n: int = DEFAULT_BLOCK_N,
-                 interpret: bool = True):
+                 interpret: bool | None = None):
+    interpret = resolve_interpret(interpret)
     (n,) = q.shape
     pad = (-n) % block_n
     qp = jnp.pad(q, (0, pad)) if pad else q

@@ -44,3 +44,17 @@ def fused_sgd_ref(p, g, m, lr, momentum: float = 0.9, nesterov: bool = False):
     m_new = momentum * m + g
     step = g + momentum * m_new if nesterov else m_new
     return p - lr * step, m_new
+
+
+def fused_rs_update_ref(recv, p, m, mask, lr, momentum: float = 0.9,
+                        nesterov: bool = False, scale: float = 1.0,
+                        weight_decay: float = 0.0, scales=None):
+    """(k, n) chunks [+ (k,) int8 scales] -> fused mean + SGD on the shard."""
+    r = recv.astype(jnp.float32)
+    if scales is not None:
+        r = r * scales.reshape(-1, 1).astype(jnp.float32)
+    g = jnp.sum(r, axis=0) * scale
+    p = p.astype(jnp.float32)
+    if weight_decay:
+        g = g + weight_decay * mask.astype(jnp.float32) * p
+    return fused_sgd_ref(p, g, m, lr, momentum, nesterov)

@@ -53,6 +53,17 @@ def main():
     ap.add_argument("--optimizer", default="sgd", choices=["sgd", "adamw"])
     ap.add_argument("--exchanger", default="asa")
     ap.add_argument("--scheme", default="subgd", choices=["subgd", "awagd"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--bucket-bytes", type=int, default=0,
+                    help="pack gradient leaves into flat buckets of up to "
+                         "this many bytes before exchanging")
+    ap.add_argument("--sharded-update", action="store_true",
+                    help="ZeRO-1-style RS->update->AG: update only the "
+                         "local 1/k shard between the exchange halves")
+    ap.add_argument("--overlap", default=None, choices=["buckets"],
+                    help="double-buffer the microbatch scan so bucket "
+                         "reduce-scatters overlap the next backprop "
+                         "(implies --sharded-update)")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
 
@@ -66,7 +77,11 @@ def main():
     batches = synthetic_batches(cfg, args.batch, args.steps, args.seq)
     _, report = train(model, opt, lr_fn, mesh, batches,
                       exchanger=args.exchanger, scheme=args.scheme,
-                      num_steps=args.steps, ckpt_path=args.ckpt)
+                      num_steps=args.steps, ckpt_path=args.ckpt,
+                      microbatches=args.microbatches,
+                      bucket_bytes=args.bucket_bytes,
+                      sharded_update=args.sharded_update,
+                      overlap=args.overlap)
     print(f"done: {report.steps} steps, "
           f"{report.examples_per_s:.1f} ex/s, "
           f"loss {report.losses[0]:.4f} -> {report.losses[-1]:.4f}")

@@ -4,6 +4,21 @@ supporting both AWAGD and SUBGD parallel-SGD schemes) and AdamW.
 An ``Optimizer`` is (init, update):
     state = init(params)
     new_params, new_state = update(params, grads, state, lr)
+
+The optional **flat hooks** power the ZeRO-1-style RS->update->AG path in
+``core/bsp.py``, where each data rank owns only the local 1/k shard of the
+optimizer state and updates flat fp32 bucket shards between the exchange
+halves:
+
+    st = flat_init(n)                      # flat state for an n-extent shard
+    p', st' = flat_update(p, g, st, lr, wd_mask)
+
+``wd_mask`` is a 0/1 fp32 array marking elements whose *original* leaf is
+>=2-D (weight decay never applies to biases/norms; the flat shard has lost
+that rank information, so the caller supplies it) — or ``None`` for no
+decay. ``rs_fused_update`` additionally fuses the k-way chunk summation
+with the update (the Pallas ``fused_rs_update`` kernel): it consumes the
+*un-summed* alltoall receives.
 """
 from __future__ import annotations
 
@@ -19,6 +34,9 @@ class Optimizer:
     name: str
     init: Callable
     update: Callable
+    flat_init: Callable | None = None
+    flat_update: Callable | None = None
+    rs_fused_update: Callable | None = None
 
 
 def sgd_momentum(momentum: float = 0.9, weight_decay: float = 5e-4,
@@ -53,7 +71,33 @@ def sgd_momentum(momentum: float = 0.9, weight_decay: float = 5e-4,
                              is_leaf=lambda t: isinstance(t, tuple))
         return new_params, {"m": new_m}
 
-    return Optimizer("sgd", init, update)
+    def flat_init(n: int):
+        return {"m": jnp.zeros((n,), jnp.float32)}
+
+    def flat_update(p, g, state, lr, wd_mask):
+        g32 = g.astype(jnp.float32)
+        p32 = p.astype(jnp.float32)
+        if weight_decay and wd_mask is not None:
+            g32 = g32 + weight_decay * wd_mask * p32
+        if fused_kernel is not None:
+            p_new, m_new = fused_kernel(p32, g32, state["m"], lr,
+                                        momentum, nesterov)
+        else:
+            m_new = momentum * state["m"] + g32
+            step = (g32 + momentum * m_new) if nesterov else m_new
+            p_new = p32 - lr * step
+        return p_new, {"m": m_new}
+
+    def rs_fused_update(recv, p, state, lr, wd_mask, scale, scales=None):
+        from repro.kernels import ops
+        p_new, m_new = ops.fused_rs_update(
+            recv, p.astype(jnp.float32), state["m"], lr,
+            wd_mask=wd_mask, scale=scale, momentum=momentum,
+            nesterov=nesterov, weight_decay=weight_decay, scales=scales)
+        return p_new, {"m": m_new}
+
+    return Optimizer("sgd", init, update, flat_init, flat_update,
+                     rs_fused_update)
 
 
 def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
@@ -84,7 +128,25 @@ def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
                                       is_leaf=lambda t: isinstance(t, tuple))
         return pick(0), {"m": pick(1), "v": pick(2), "t": t}
 
-    return Optimizer("adamw", init, update)
+    def flat_init(n: int):
+        return {"m": jnp.zeros((n,), jnp.float32),
+                "v": jnp.zeros((n,), jnp.float32),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def flat_update(p, g, state, lr, wd_mask):
+        t = state["t"] + 1
+        bc1 = 1.0 - b1 ** t.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** t.astype(jnp.float32)
+        g32 = g.astype(jnp.float32)
+        p32 = p.astype(jnp.float32)
+        m_new = b1 * state["m"] + (1 - b1) * g32
+        v_new = b2 * state["v"] + (1 - b2) * jnp.square(g32)
+        step = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+        if weight_decay and wd_mask is not None:
+            step = step + weight_decay * wd_mask * p32
+        return p32 - lr * step, {"m": m_new, "v": v_new, "t": t}
+
+    return Optimizer("adamw", init, update, flat_init, flat_update)
 
 
 def get_optimizer(name: str, **kw) -> Optimizer:

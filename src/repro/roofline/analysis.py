@@ -72,6 +72,73 @@ def parse_collectives(hlo_text: str) -> CollectiveStats:
     return stats
 
 
+_DOT_RE = re.compile(r"=\s+\S+\s+(?:dot|convolution)\(")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.-]+)\s*=")
+_REF_RE = re.compile(r"%([\w.-]+)")
+
+
+def overlap_evidence(hlo_text: str) -> dict:
+    """Evidence that exchange collectives interleave with backward compute.
+
+    The double-buffered ``overlap="buckets"`` schedule puts microbatch
+    *i-1*'s reduce-scatter inside the scan/while body next to microbatch
+    *i*'s backward dots (serialized exchange lives after the loop, so no
+    single computation mixes the two). Two signals per computation:
+
+    - **order**: a collective printed before the computation's last dot
+      (on TPU the latency-hiding scheduler hoists the async ``-start``);
+    - **independence**: a collective whose transitive operand closure
+      contains no dot of the same computation — it consumes only
+      loop-carried state, so it is *issuable* before the first backward
+      dot regardless of how a synchronous backend (CPU) ordered the text.
+    """
+    blocks, cur = [], []
+    for line in hlo_text.splitlines():
+        cur.append(line)
+        if line.startswith("}"):
+            blocks.append(cur)
+            cur = []
+    if cur:
+        blocks.append(cur)
+    n_mixed = 0
+    ordered = independent = False
+    for blk in blocks:
+        coll_idx = [i for i, l in enumerate(blk) if _COLL_RE.search(l)]
+        dot_idx = [i for i, l in enumerate(blk) if _DOT_RE.search(l)]
+        if not (coll_idx and dot_idx):
+            continue
+        n_mixed += 1
+        if min(coll_idx) < max(dot_idx):
+            ordered = True
+        deps, dots = {}, set()
+        dot_set = set(dot_idx)
+        for i, l in enumerate(blk):
+            m = _DEF_RE.match(l)
+            if not m:
+                continue
+            name = m.group(1)
+            deps[name] = [r for r in _REF_RE.findall(l.split("=", 1)[1])]
+            if i in dot_set:
+                dots.add(name)
+        for i in coll_idx:
+            m = _DEF_RE.match(blk[i])
+            if not m:
+                continue
+            seen, stack = set(), list(deps.get(m.group(1), []))
+            while stack:
+                r = stack.pop()
+                if r in seen:
+                    continue
+                seen.add(r)
+                stack.extend(deps.get(r, []))
+            if not (seen & dots):
+                independent = True
+                break
+    return {"rs_before_last_dot": ordered or independent,
+            "comm_independent_of_dots": independent,
+            "computations_mixing_comm_and_dots": n_mixed}
+
+
 @dataclass
 class Roofline:
     flops: float

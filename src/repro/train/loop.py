@@ -8,7 +8,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint.ckpt import save_checkpoint
-from repro.core.bsp import init_train_state, make_bsp_step
+from repro.core.bsp import (init_sharded_train_state, init_train_state,
+                            make_bsp_step)
 from repro.core.exchanger import get_exchanger
 from repro.models.registry import Model
 from repro.optim.optimizers import Optimizer
@@ -27,38 +28,56 @@ def train(model: Model, optimizer: Optimizer, lr_fn, mesh, batches, *,
           data_axes=("data",), num_steps: int = 100, seed: int = 0,
           log_every: int = 10, ckpt_path: str | None = None,
           ckpt_every: int = 0, state=None, sum_fn=None,
+          microbatches: int = 1, bucket_bytes: int = 0,
+          sharded_update: bool = False, overlap: str | None = None,
           print_fn=print) -> tuple[dict, TrainReport]:
-    """``batches``: iterable of device-ready batches (e.g. ParallelLoader)."""
+    """``batches``: iterable of device-ready batches (e.g. ParallelLoader).
+
+    ``sharded_update``/``overlap``/``bucket_bytes`` select the
+    RS->update->AG pipeline (see ``core/bsp.py``); the sharded optimizer
+    state is initialized here when no ``state`` is passed."""
     from repro.core.exchanger import default_chunk_sum
     ex = get_exchanger(exchanger)
+    sharded = bool(sharded_update or overlap)
     step_fn = jax.jit(make_bsp_step(
         model, optimizer, ex, lr_fn, mesh, data_axes=data_axes,
-        scheme=scheme, sum_fn=sum_fn or default_chunk_sum))
+        scheme=scheme, sum_fn=sum_fn or default_chunk_sum,
+        microbatches=microbatches, bucket_bytes=bucket_bytes,
+        sharded_update=sharded_update, overlap=overlap))
     if state is None:
-        state = init_train_state(model, optimizer, jax.random.key(seed))
+        if sharded:
+            state = init_sharded_train_state(
+                model, optimizer, jax.random.key(seed), mesh,
+                data_axes=data_axes, bucket_bytes=bucket_bytes)
+        else:
+            state = init_train_state(model, optimizer, jax.random.key(seed))
     rng = jax.random.key(seed + 1)
 
     report = TrainReport()
     n_examples = 0
     t0 = time.perf_counter()
     it = iter(batches)
+    # losses stay on device between log boundaries: a per-step float()
+    # would block dispatch every step (the deferred trace is materialized
+    # once at the end)
+    device_losses = []
     for i in range(num_steps):
         try:
             batch = next(it)
         except StopIteration:
             break
         state, metrics = step_fn(state, batch, jax.random.fold_in(rng, i))
-        loss = float(metrics["loss"])
-        report.losses.append(loss)
+        device_losses.append(metrics["loss"])
         first = jax.tree.leaves(batch)[0]
         n_examples += int(first.shape[0])
         if log_every and (i % log_every == 0 or i == num_steps - 1):
-            print_fn(f"step {i:5d}  loss {loss:.4f}")
+            print_fn(f"step {i:5d}  loss {float(device_losses[-1]):.4f}")
         if ckpt_path and ckpt_every and (i + 1) % ckpt_every == 0:
             save_checkpoint(ckpt_path, state, step=i + 1)
         report.steps = i + 1
     jax.block_until_ready(state)
     report.wall_time = time.perf_counter() - t0
+    report.losses = [float(l) for l in device_losses]
     report.examples_per_s = n_examples / max(report.wall_time, 1e-9)
     if ckpt_path:
         save_checkpoint(ckpt_path, state, step=report.steps)

@@ -9,8 +9,9 @@ try:
 except ImportError:   # no hypothesis in this env: deterministic fallback
     from repro.testing.hypofallback import given, settings, st
 
-from repro.kernels import ops, ref
+from repro.kernels import default_interpret, ops, ref
 from repro.kernels.chunk_sum import chunk_sum as raw_chunk_sum
+from repro.kernels.fused_rs_update import fused_rs_update as raw_rs_update
 from repro.kernels.fused_sgd import fused_sgd as raw_fused_sgd
 from repro.kernels.quantize import (quant_int8 as raw_quant_int8,
                                     dequant_int8 as raw_dequant_int8)
@@ -84,6 +85,77 @@ def test_ops_wrappers_nd_shapes():
     p = jax.random.normal(jax.random.key(1), (8, 16))
     po, mo = ops.fused_sgd(p, p, jnp.zeros_like(p), 0.1)
     assert po.shape == (8, 16)
+
+
+@pytest.mark.parametrize("k", [2, 8])
+@pytest.mark.parametrize("n", [128, 5000])
+@pytest.mark.parametrize("nesterov", [False, True])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float16])
+def test_fused_rs_update_matches_ref(k, n, nesterov, dtype):
+    key = jax.random.key(k * n + nesterov)
+    recv = (jax.random.normal(key, (k, n)) * 2).astype(dtype)
+    p = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    m = jax.random.normal(jax.random.fold_in(key, 2), (n,))
+    mask = (jax.random.uniform(jax.random.fold_in(key, 3), (n,))
+            > 0.5).astype(jnp.float32)
+    kw = dict(momentum=0.9, nesterov=nesterov, scale=1.0 / k,
+              weight_decay=5e-4)
+    po, mo = raw_rs_update(recv, p, m, mask, 0.05, interpret=True, **kw)
+    pr, mr = ref.fused_rs_update_ref(recv, p, m, mask, 0.05, **kw)
+    np.testing.assert_allclose(np.asarray(po), np.asarray(pr), rtol=2e-5,
+                               atol=1e-7)
+    np.testing.assert_allclose(np.asarray(mo), np.asarray(mr), rtol=2e-5,
+                               atol=1e-7)
+
+
+def test_fused_rs_update_matches_chunk_sum_plus_fused_sgd():
+    """The fused kernel == default_chunk_sum -> (wd) -> fused_sgd chain."""
+    k, n = 8, 4000
+    key = jax.random.key(7)
+    recv = (jax.random.normal(key, (k, n)) * 2).astype(jnp.float16)
+    p = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    m = jax.random.normal(jax.random.fold_in(key, 2), (n,))
+    mask = jnp.ones((n,), jnp.float32)
+    po, mo = raw_rs_update(recv, p, m, mask, 0.05, momentum=0.9,
+                           nesterov=True, scale=1.0 / k, weight_decay=5e-4,
+                           interpret=True)
+    g = ref.chunk_sum_ref(recv) / k + 5e-4 * p
+    pc, mc = ops.fused_sgd(p, g, m, 0.05, momentum=0.9, nesterov=True)
+    np.testing.assert_allclose(np.asarray(po), np.asarray(pc), rtol=1e-6,
+                               atol=1e-7)
+    np.testing.assert_allclose(np.asarray(mo), np.asarray(mc), rtol=1e-6,
+                               atol=1e-7)
+
+
+def test_fused_rs_update_int8_dequant():
+    """int8 wire variant dequantizes with one fp32 scale per rank chunk."""
+    k, n = 4, 3001
+    key = jax.random.key(3)
+    q = jax.random.randint(key, (k, n), -127, 128, dtype=jnp.int8)
+    scales = jax.random.uniform(jax.random.fold_in(key, 1), (k,)) * 0.01
+    p = jax.random.normal(jax.random.fold_in(key, 2), (n,))
+    m = jnp.zeros((n,))
+    mask = jnp.zeros((n,), jnp.float32)
+    po, mo = raw_rs_update(q, p, m, mask, 0.1, scale=1.0 / k, scales=scales,
+                           interpret=True)
+    pr, mr = ref.fused_rs_update_ref(q, p, m, mask, 0.1, scale=1.0 / k,
+                                     scales=scales)
+    np.testing.assert_allclose(np.asarray(po), np.asarray(pr), rtol=1e-6,
+                               atol=1e-7)
+    np.testing.assert_allclose(np.asarray(mo), np.asarray(mr), rtol=1e-6,
+                               atol=1e-7)
+
+
+def test_default_interpret_cpu_and_env(monkeypatch):
+    """Backend autodetect: interpret on CPU; env overrides win."""
+    assert default_interpret() is True   # this container is CPU-only
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert default_interpret() is False
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert default_interpret() is True
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET")
+    monkeypatch.setenv("REPRO_PALLAS_COMPILED", "1")
+    assert default_interpret() is False
 
 
 @settings(max_examples=20, deadline=None)
