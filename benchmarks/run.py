@@ -10,10 +10,14 @@ Prints ``name,us_per_call,derived`` CSV:
 - bench_kernels  -> kernel micro-bench
 - bench_dist     -> sharding spec construction (repro.dist) on the largest
                     config; must stay off the compile hot path
+- bench_serve    -> continuous-batching engine vs static-batch serving
+                    (steady-state tok/s, p50/p99 token latency, recompile
+                    guard)
 
-``--quick`` runs the CI smoke subset (bench_comm + bench_overlap at
-reduced scale); ``--json PATH`` additionally writes the rows as JSON so
-the perf trajectory accumulates as artifacts (``BENCH_*.json``).
+``--quick`` runs the CI smoke subset (bench_comm + bench_overlap +
+bench_serve at reduced scale); ``--json PATH`` additionally writes the
+rows as JSON so the perf trajectory accumulates as artifacts
+(``BENCH_*.json``).
 """
 import argparse
 import inspect
@@ -23,10 +27,14 @@ import sys
 import traceback
 
 # `python benchmarks/run.py` puts benchmarks/ (not the repo root) on
-# sys.path; the repo root is needed for `from benchmarks import ...`
+# sys.path; the repo root is needed for `from benchmarks import ...` and
+# src/ for the in-process benches (`repro` may not be pip-installed)
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 if _ROOT not in sys.path:
     sys.path.insert(0, _ROOT)
+_SRC = os.path.join(_ROOT, "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
 
 
 def main() -> None:
@@ -41,14 +49,15 @@ def main() -> None:
 
     from benchmarks import (bench_comm, bench_dist, bench_easgd,
                             bench_kernels, bench_loading, bench_overlap,
-                            bench_scaling)
+                            bench_scaling, bench_serve)
     if args.quick:
-        modules = [("comm", bench_comm), ("overlap", bench_overlap)]
+        modules = [("comm", bench_comm), ("overlap", bench_overlap),
+                   ("serve", bench_serve)]
     else:
         modules = [("comm", bench_comm), ("overlap", bench_overlap),
                    ("scaling", bench_scaling), ("easgd", bench_easgd),
                    ("loading", bench_loading), ("kernels", bench_kernels),
-                   ("dist", bench_dist)]
+                   ("dist", bench_dist), ("serve", bench_serve)]
     print("name,us_per_call,derived")
     failed, rows = [], []
     for name, mod in modules:

@@ -1,16 +1,16 @@
-"""Serving example: batched greedy decode with KV/SSM caches across three
-architecture families (dense GQA, attention-free SSM, MLA+MoE).
+"""Serving example: the continuous-batching engine across three
+architecture families (dense GQA, attention-free SSM, MLA+MoE), reporting
+prefill and decode throughput separately.
 
     PYTHONPATH=src python examples/serve_decode.py
 """
-import time
+import numpy as np
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
 from repro.models import build_model
-from repro.train.serve import generate
+from repro.serve import Engine, SamplingParams
 
 
 def main():
@@ -18,16 +18,28 @@ def main():
         cfg = get_smoke_config(arch)
         model = build_model(cfg)
         params = model.init(jax.random.key(0))
-        B, prompt_len, max_new = 4, 8, 24
-        prompt = jax.random.randint(jax.random.key(1), (B, prompt_len), 0,
-                                    cfg.vocab_size)
-        t0 = time.perf_counter()
-        out = generate(model, params, prompt, max_new=max_new,
-                       seq_len=prompt_len + max_new)
-        dt = time.perf_counter() - t0
-        print(f"{arch:24s} batch={B} generated {max_new} tokens each "
-              f"in {dt:5.2f}s ({B * max_new / dt:6.1f} tok/s)  "
-              f"sample={out[0, prompt_len:prompt_len + 8].tolist()}")
+
+        rng = np.random.RandomState(0)
+        n_req, slots = 8, 4
+        lens = np.maximum(1, rng.poisson(12, n_req))
+        news = np.maximum(1, rng.poisson(16, n_req))
+        prompts = [rng.randint(0, cfg.vocab_size, size=n).tolist()
+                   for n in lens]
+
+        eng = Engine(model, params, max_slots=slots,
+                     max_seq=int((lens + news).max()), prefill_chunk=16)
+        rids = [eng.submit(p, int(m), SamplingParams())
+                for p, m in zip(prompts, news)]
+        results = eng.run()
+        st = eng.stats
+        lat = st.token_latency_percentiles()
+        print(f"{arch:24s} {n_req} reqs on {slots} slots | "
+              f"prefill {st.prefill_tokens:3d} tok @ "
+              f"{st.prefill_tok_s():7.1f} tok/s | "
+              f"decode {st.decoded_tokens:3d} tok @ "
+              f"{st.decode_tok_s():7.1f} tok/s | "
+              f"p50/p99 {lat[50] * 1e3:5.1f}/{lat[99] * 1e3:5.1f} ms | "
+              f"sample={results[rids[0]][:6]}")
 
 
 if __name__ == "__main__":

@@ -46,6 +46,18 @@ def fused_sgd_ref(p, g, m, lr, momentum: float = 0.9, nesterov: bool = False):
     return p - lr * step, m_new
 
 
+def slot_gather_sample_ref(logits, onehot, temperature, noise):
+    """(S,C,V) logits + (S,C) one-hot + (S,) temps + (S,V) Gumbel noise ->
+    (greedy (S,), sampled (S,)) int32 (Gumbel-max temperature sampling)."""
+    row = jnp.einsum("scv,sc->sv", logits.astype(jnp.float32),
+                     onehot.astype(jnp.float32))
+    greedy = jnp.argmax(row, axis=-1).astype(jnp.int32)
+    t = jnp.maximum(temperature.astype(jnp.float32), 1e-6)
+    sampled = jnp.argmax(row / t[:, None] + noise.astype(jnp.float32),
+                         axis=-1).astype(jnp.int32)
+    return greedy, sampled
+
+
 def fused_rs_update_ref(recv, p, m, mask, lr, momentum: float = 0.9,
                         nesterov: bool = False, scale: float = 1.0,
                         weight_decay: float = 0.0, scales=None):

@@ -1,7 +1,12 @@
-"""Serving launcher: batched greedy decode of a (smoke) model.
+"""Serving launcher: continuous-batching engine over a (smoke) model.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
-        --batch 4 --prompt-len 8 --max-new 16
+        --num-requests 16 --max-slots 4 --prefill-chunk 16 \
+        --temperature 0.8 --top-k 40 --top-p 0.95
+
+``--reference`` runs the old static-batch greedy path
+(``train.serve.generate``) instead — the parity oracle and the baseline
+``bench_serve`` measures the engine against.
 """
 from __future__ import annotations
 
@@ -10,9 +15,11 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_smoke_config, get_config
 from repro.models import build_model
+from repro.serve import Engine, SamplingParams
 from repro.train.serve import generate
 
 
@@ -21,27 +28,74 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full", dest="smoke", action="store_false")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=8)
-    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--num-requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=8,
+                    help="mean prompt length (mixed workload)")
+    ap.add_argument("--max-new", type=int, default=16,
+                    help="mean output length (mixed workload)")
+    ap.add_argument("--max-slots", type=int, default=4,
+                    help="decode lanes in the fixed slot pool")
+    ap.add_argument("--max-seq", type=int, default=0,
+                    help="cache rows per slot (0: auto from workload)")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="prompt tokens prefilled per model call")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fused-sampling", action="store_true",
+                    help="slot_gather Pallas kernel fast path "
+                         "(greedy/temperature only)")
+    ap.add_argument("--reference", action="store_true",
+                    help="static-batch greedy generate() instead of the "
+                         "engine")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    if cfg.family == "conv":
-        raise SystemExit("conv models have no decode step")
+    if cfg.family != "decoder":
+        raise SystemExit(f"{cfg.family!r} models have no serve path")
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
-    prompt = jax.random.randint(jax.random.key(1),
-                                (args.batch, args.prompt_len), 0,
-                                cfg.vocab_size)
+
+    rng = np.random.RandomState(args.seed)
+    lens = np.maximum(1, rng.poisson(args.prompt_len, args.num_requests))
+    news = np.maximum(1, rng.poisson(args.max_new, args.num_requests))
+    prompts = [rng.randint(0, cfg.vocab_size, size=n).tolist()
+               for n in lens]
+
+    if args.reference:
+        t0 = time.perf_counter()
+        done = 0
+        for p, m in zip(prompts, news):
+            out = generate(model, params, jnp.asarray([p], jnp.int32),
+                           max_new=int(m), seq_len=len(p) + int(m))
+            jax.block_until_ready(out)
+            done += int(m)
+        dt = time.perf_counter() - t0
+        print(f"reference generate: {done} tokens in {dt:.2f}s "
+              f"({done / dt:.1f} tok/s)")
+        return
+
+    max_seq = args.max_seq or int((lens + news).max())
+    eng = Engine(model, params, max_slots=args.max_slots, max_seq=max_seq,
+                 prefill_chunk=args.prefill_chunk,
+                 fused_sampling=args.fused_sampling)
+    sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                        top_p=args.top_p, seed=args.seed)
+    rids = [eng.submit(p, int(m), sp) for p, m in zip(prompts, news)]
     t0 = time.perf_counter()
-    out = generate(model, params, prompt, max_new=args.max_new,
-                   seq_len=args.prompt_len + args.max_new)
+    results = eng.run()
     dt = time.perf_counter() - t0
-    toks = args.batch * args.max_new
-    print(f"generated {out.shape} in {dt:.2f}s "
-          f"({toks / dt:.1f} tok/s batched greedy)")
-    print(out[0])
+    st = eng.stats
+    lat = st.token_latency_percentiles()
+    print(f"served {len(rids)} requests / {st.decoded_tokens} tokens "
+          f"in {dt:.2f}s on {args.max_slots} slots "
+          f"(prefill {st.prefill_tok_s():.1f} tok/s, "
+          f"decode {st.decode_tok_s():.1f} tok/s, "
+          f"p50/p99 token latency {lat[50] * 1e3:.1f}/{lat[99] * 1e3:.1f} ms)")
+    print(f"decode compiled {eng.trace_counts['decode']}x across "
+          f"{st.steps} steps")
+    print("sample:", results[rids[0]][:16])
 
 
 if __name__ == "__main__":

@@ -97,6 +97,42 @@ def decode_keep(k_pos, pos, window):
     return keep
 
 
+def _decode_pos(pos, batch: int):
+    """Normalize a decode position argument to ((B,1) rope positions,
+    per-example (B,) cache indices or None-if-scalar).
+
+    A scalar ``pos`` is the classic whole-batch decode step; a (B,) vector
+    is the serving engine's per-slot position (each sequence in the batch
+    is at its own depth)."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        return jnp.full((batch, 1), pos, jnp.int32), None
+    return pos[:, None], pos
+
+
+def decode_keep_batched(k_pos, pos_vec, window):
+    """(B, S_k) mask for one query per batch row at position ``pos_vec[b]``."""
+    keep = k_pos[None, :] <= pos_vec[:, None]
+    dist = pos_vec[:, None] - k_pos[None, :]
+    if _is_static(window):
+        if window > 0:
+            keep &= dist < window
+    else:
+        keep &= (window <= 0) | (dist < window)
+    return keep
+
+
+def _update_cache_rows(buf, new, pos, pos_vec):
+    """Write the (B,1,...) ``new`` rows into ``buf`` (B,S,...) at the cache
+    index — a shared scalar ``pos`` or per-example ``pos_vec``."""
+    new = new.astype(buf.dtype)
+    if pos_vec is None:
+        return jax.lax.dynamic_update_slice_in_dim(buf, new, pos, axis=1)
+    return jax.vmap(
+        lambda b, u, i: jax.lax.dynamic_update_slice_in_dim(b, u, i, axis=0)
+    )(buf, new, pos_vec)
+
+
 def _masked_softmax(scores, keep):
     scores = jnp.where(keep, scores, NEG_INF)
     return jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
@@ -215,22 +251,51 @@ def gqa_init_cache(batch: int, max_len: int, a: AttentionConfig, dtype):
 
 
 def gqa_decode(p, cache, x, pos, a: AttentionConfig, window: int):
-    """One-token decode. x:(B,1,d); pos: scalar int (current index).
+    """One-token decode. x:(B,1,d); pos: scalar int (current index) or a
+    (B,) vector of per-sequence indices (serving engine slots).
 
     Returns (out, new_cache)."""
     q, k, v = _project_qkv(p, x, a)
     if a.qk_norm:
         q, k = head_rms_norm(q), head_rms_norm(k)
-    posv = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    posv, pos_vec = _decode_pos(pos, x.shape[0])
     q = apply_rope(q, posv, a.rope_theta)
     k = apply_rope(k, posv, a.rope_theta)
-    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
-    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+    ck = _update_cache_rows(cache["k"], k, pos, pos_vec)
+    cv = _update_cache_rows(cache["v"], v, pos, pos_vec)
     S = ck.shape[1]
-    keep = decode_keep(jnp.arange(S), pos, window)
-    out = gqa_attend(q, ck, cv, keep[None, :], a)
+    if pos_vec is None:
+        keep = decode_keep(jnp.arange(S), pos, window)[None, :]   # (1,S)
+    else:
+        keep = decode_keep_batched(jnp.arange(S), pos_vec, window)[:, None, :]
+    out = gqa_attend(q, ck, cv, keep, a)
     B = x.shape[0]
     y = jnp.einsum("bsf,fd->bsd", out.reshape(B, 1, -1), p["wo"])
+    return y, {"k": ck, "v": cv}
+
+
+def gqa_prefill(p, cache, x, positions, pos0, a: AttentionConfig,
+                window: int):
+    """Chunked prompt prefill: attend a whole (B,C,d) chunk against the
+    cache and write its K/V rows at [pos0, pos0+C) in one pass.
+
+    ``positions`` (B,C) are absolute positions (pos0 + arange(C)); rows
+    beyond the valid prompt length write pad garbage that is masked out of
+    every later read (causality) and overwritten by the decode steps."""
+    q, k, v = _project_qkv(p, x, a)
+    if a.qk_norm:
+        q, k = head_rms_norm(q), head_rms_norm(k)
+    q = apply_rope(q, positions, a.rope_theta)
+    k = apply_rope(k, positions, a.rope_theta)
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), pos0, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), pos0, axis=1)
+    S = ck.shape[1]
+    keep = causal_window_mask(positions[0], jnp.arange(S), window)   # (C,S)
+    out = gqa_attend(q, ck, cv, keep, a)
+    B, C = x.shape[:2]
+    y = jnp.einsum("bsf,fd->bsd", out.reshape(B, C, -1), p["wo"])
     return y, {"k": ck, "v": cv}
 
 
@@ -269,11 +334,12 @@ def mla_init_cache(batch: int, max_len: int, a: AttentionConfig, dtype):
 
 
 def mla_decode(p, cache, x, pos, a: AttentionConfig, window: int):
-    """Absorbed-matmul MLA decode: attends in the 512-d latent space."""
+    """Absorbed-matmul MLA decode: attends in the 512-d latent space.
+    ``pos`` may be a scalar or a (B,) per-sequence vector."""
     B = x.shape[0]
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     q_nope, q_rope = jnp.split(q, [a.qk_nope_dim], axis=-1)
-    posv = jnp.full((B, 1), pos, jnp.int32)
+    posv, pos_vec = _decode_pos(pos, B)
     q_rope = apply_rope(q_rope, posv, a.rope_theta)
     # absorb W_uk into the query: (B,1,H,nope) x (R,H,nope) -> (B,1,H,R)
     q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wuk"])
@@ -281,18 +347,54 @@ def mla_decode(p, cache, x, pos, a: AttentionConfig, window: int):
     c_new = jnp.einsum("bsd,dr->bsr", x, p["wdkv"])
     kr_new = jnp.einsum("bsd,dr->bsr", x, p["wkr"])
     kr_new = apply_rope(kr_new[:, :, None, :], posv, a.rope_theta)[:, :, 0, :]
-    ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], c_new.astype(cache["ckv"].dtype), pos, axis=1)
-    kr = jax.lax.dynamic_update_slice_in_dim(cache["kr"], kr_new.astype(cache["kr"].dtype), pos, axis=1)
+    ckv = _update_cache_rows(cache["ckv"], c_new, pos, pos_vec)
+    kr = _update_cache_rows(cache["kr"], kr_new, pos, pos_vec)
 
     S = ckv.shape[1]
-    keep = decode_keep(jnp.arange(S), pos, window)
+    if pos_vec is None:
+        keep = decode_keep(jnp.arange(S), pos, window)[None, None, None, :]
+    else:
+        keep = decode_keep_batched(jnp.arange(S), pos_vec,
+                                   window)[:, None, None, :]
+    scale = 1.0 / jnp.sqrt(a.qk_nope_dim + a.qk_rope_dim).astype(x.dtype)
+    s_lat = jnp.einsum("bshr,btr->bhst", q_lat, ckv)
+    s_rope = jnp.einsum("bshk,btk->bhst", q_rope, kr)
+    w = _masked_softmax((s_lat + s_rope) * scale, keep).astype(x.dtype)
+    o_lat = jnp.einsum("bhst,btr->bshr", w, ckv)             # (B,1,H,R)
+    out = jnp.einsum("bshr,rhk->bshk", o_lat, p["wuv"]).reshape(B, 1, -1)
+    y = jnp.einsum("bsf,fd->bsd", out, p["wo"])
+    return y, {"ckv": ckv, "kr": kr}
+
+
+def mla_prefill(p, cache, x, positions, pos0, a: AttentionConfig,
+                window: int):
+    """Chunked MLA prefill: absorbed-matmul attention (same math as
+    ``mla_decode``, C query rows instead of 1) that writes the latent +
+    rope-key cache rows at [pos0, pos0+C)."""
+    B, C, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = jnp.split(q, [a.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, a.rope_theta)
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wuk"])
+
+    c_new = jnp.einsum("bsd,dr->bsr", x, p["wdkv"])
+    kr_new = jnp.einsum("bsd,dr->bsr", x, p["wkr"])
+    kr_new = apply_rope(kr_new[:, :, None, :], positions,
+                        a.rope_theta)[:, :, 0, :]
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], c_new.astype(cache["ckv"].dtype), pos0, axis=1)
+    kr = jax.lax.dynamic_update_slice_in_dim(
+        cache["kr"], kr_new.astype(cache["kr"].dtype), pos0, axis=1)
+
+    S = ckv.shape[1]
+    keep = causal_window_mask(positions[0], jnp.arange(S), window)  # (C,S)
     scale = 1.0 / jnp.sqrt(a.qk_nope_dim + a.qk_rope_dim).astype(x.dtype)
     s_lat = jnp.einsum("bshr,btr->bhst", q_lat, ckv)
     s_rope = jnp.einsum("bshk,btk->bhst", q_rope, kr)
     w = _masked_softmax((s_lat + s_rope) * scale,
-                        keep[None, None, None, :]).astype(x.dtype)
-    o_lat = jnp.einsum("bhst,btr->bshr", w, ckv)             # (B,1,H,R)
-    out = jnp.einsum("bshr,rhk->bshk", o_lat, p["wuv"]).reshape(B, 1, -1)
+                        keep[None, None]).astype(x.dtype)
+    o_lat = jnp.einsum("bhst,btr->bshr", w, ckv)             # (B,C,H,R)
+    out = jnp.einsum("bshr,rhk->bshk", o_lat, p["wuv"]).reshape(B, C, -1)
     y = jnp.einsum("bsf,fd->bsd", out, p["wo"])
     return y, {"ckv": ckv, "kr": kr}
 
@@ -320,3 +422,10 @@ def attn_decode(p, cache, x, pos, cfg: ArchConfig, window: int):
     if a.kv_lora_rank:
         return mla_decode(p, cache, x, pos, a, window)
     return gqa_decode(p, cache, x, pos, a, window)
+
+
+def attn_prefill(p, cache, x, positions, pos0, cfg: ArchConfig, window: int):
+    a = cfg.attention
+    if a.kv_lora_rank:
+        return mla_prefill(p, cache, x, positions, pos0, a, window)
+    return gqa_prefill(p, cache, x, positions, pos0, a, window)

@@ -42,13 +42,26 @@ def capacity(tokens: int, m: MoEConfig) -> int:
     return max(8, min(tokens, c))
 
 
-def moe_forward(p, x, m: MoEConfig):
-    """x: (B, S, d) -> (y, aux_loss)."""
+def moe_forward(p, x, m: MoEConfig, *, full_capacity: bool = False,
+                valid=None):
+    """x: (B, S, d) -> (y, aux_loss).
+
+    ``full_capacity=True`` sizes the expert buffer at C=T so no token is
+    ever dropped (each token routes to K *distinct* experts, so per-expert
+    load is at most T). That removes the only cross-token coupling in the
+    layer, making per-token outputs independent of batch composition — the
+    contract the serving engine relies on for bit-exact continuous batching
+    (idle-slot garbage tokens must not perturb live requests). Training
+    keeps the capped capacity (the standard TPU drop trade-off).
+
+    ``valid`` (flat (T,) bool) excludes tokens (prompt padding in chunked
+    prefill) from routing: they claim no buffer slot and contribute only
+    the shared-expert output."""
     B, S, d = x.shape
     T = B * S
     xt = x.reshape(T, d)
     E, K = m.num_experts, m.top_k
-    C = capacity(T, m)
+    C = T if full_capacity else capacity(T, m)
 
     logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
     probs = jax.nn.softmax(logits, axis=-1)                     # (T,E)
@@ -59,11 +72,17 @@ def moe_forward(p, x, m: MoEConfig):
     # --- position of each (token, choice) within its expert ----------------
     # one-hot over experts for each of the K choices: (T, K, E)
     onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)
+    if valid is not None:
+        onehot = onehot * valid.reshape(T, 1, 1).astype(jnp.int32)
+        gate_vals = gate_vals * valid.reshape(T, 1).astype(gate_vals.dtype)
     # rank of each choice within its expert, counted over flattened (T*K)
     flat = onehot.reshape(T * K, E)
     pos_in_expert = (jnp.cumsum(flat, axis=0) - flat)           # (T*K, E)
     pos = jnp.sum(pos_in_expert * flat, axis=-1).reshape(T, K)  # (T,K)
     keep = pos < C
+    if valid is not None:
+        # invalid tokens must not scatter into (and clobber) a live slot
+        keep &= valid.reshape(T, 1)
     gate_vals = gate_vals * keep.astype(gate_vals.dtype)
 
     # --- scatter tokens into the (E, C, d) buffer ---------------------------

@@ -6,6 +6,10 @@
 - ``forward(params, batch, unroll=False) -> logits``   (prefill path)
 - ``init_cache(batch, max_len) -> cache``     (decoder/encdec only)
 - ``decode_step(params, cache, batch, pos, seq_len, unroll) -> (logits, cache)``
+  (``pos`` may be a scalar or a per-sequence (B,) vector — serving slots)
+- ``chunk_prefill(params, cache, tokens, pos0, valid, seq_len, unroll) ->
+  (logits, cache)``  (decoder only: whole-chunk prompt prefill that writes
+  the cache in one pass; ``valid`` masks trailing prompt padding)
 
 Mixed precision: forward/loss cast >=2-D fp32 master weights to the compute
 dtype (bf16) at entry; gradients flow back to fp32 masters.
@@ -43,7 +47,8 @@ class Model:
     forward: Callable
     init_cache: Callable | None = None
     decode_step: Callable | None = None
-    prefill: Callable | None = None
+    prefill: Callable | None = None        # encdec: encoder -> cross-attn cache
+    chunk_prefill: Callable | None = None  # decoder: chunked prompt prefill
 
 
 def build_model(cfg: ArchConfig) -> Model:
@@ -66,8 +71,15 @@ def build_model(cfg: ArchConfig) -> Model:
                 cast_params(params, cdt), cache, batch["tokens"], pos, cfg,
                 seq_len=seq_len, unroll=unroll)
 
+        def chunk_prefill(params, cache, tokens, pos0, valid, *, seq_len,
+                          unroll=False):
+            return transformer.decoder_prefill(
+                cast_params(params, cdt), cache, tokens, pos0, valid, cfg,
+                seq_len=seq_len, unroll=unroll)
+
         return Model(cfg, lambda k: transformer.init_decoder(k, cfg),
-                     loss_fn, forward, init_cache, decode_step)
+                     loss_fn, forward, init_cache, decode_step,
+                     chunk_prefill=chunk_prefill)
 
     if cfg.family == "encdec":
         def loss_fn(params, batch, rng=None, unroll=False):

@@ -78,11 +78,18 @@ def _segsum(x):
     return jnp.where(mask, out, -jnp.inf)
 
 
-def ssd_chunked(x, dt, A, B, C, chunk: int):
+def ssd_chunked(x, dt, A, B, C, chunk: int, init_state=None):
     """SSD forward.
 
     x: (b, s, h, p)   dt: (b, s, h)   A: (h,) negative
     B, C: (b, s, g, n)   returns y: (b, s, h, p), final_state (b,h,p,n)
+
+    ``init_state`` (b,h,n,p fp32, default zeros) seeds the inter-chunk
+    recurrence, so a long prompt can be prefilled in consecutive calls
+    (serving engine's chunked prefill) with the state carried through the
+    cache. Positions with dt==0 are exact no-ops on the state (decay 1,
+    contribution 0), which is how both internal chunk padding and the
+    engine's prompt padding stay bit-transparent.
     """
     b, S0, h, p = x.shape
     g, n = B.shape[2], B.shape[3]
@@ -131,7 +138,8 @@ def ssd_chunked(x, dt, A, B, C, chunk: int):
         new = carry * dec[..., None, None] + st
         return new, carry  # emit state *entering* the chunk
 
-    init = jnp.zeros((b, h, n, p), jnp.float32)
+    init = (jnp.zeros((b, h, n, p), jnp.float32) if init_state is None
+            else init_state.astype(jnp.float32))
     final, prev_states = jax.lax.scan(
         step,
         init,
@@ -223,6 +231,69 @@ def ssm_decode(p, cache, x, d_model: int, s: SSMConfig, eps: float = 1e-5):
                  p["norm"], eps)
     out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
     return out, {"conv": new_conv, "state": h}
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill (serving)
+# ---------------------------------------------------------------------------
+
+def ssm_prefill(p, cache, x, valid, d_model: int, s: SSMConfig,
+                eps: float = 1e-5):
+    """Whole-chunk prefill that also writes the recurrent cache.
+
+    x: (B,C,d) — one prompt chunk; ``valid`` (scalar int32 <= C) marks how
+    many leading positions are real tokens. Pad positions are masked out of
+    the state update (dt=0 is an exact no-op) and of the conv tail, so a
+    prompt prefilled in chunks of C ends with the cache bit-identical to a
+    single-call prefill as long as C is a multiple of ``s.chunk`` (chunk
+    boundaries must align for the SSD block decomposition to match).
+
+    The first chunk of a prompt expects a *zeroed* conv/state lane (a
+    fresh ``init_cache`` or an engine ``reset_slot``): the recurrent state
+    deliberately carries across calls, so a previous occupant's state
+    would leak in. (Gating on pos0==0 inside the graph was tried and
+    perturbs XLA's scan fusion enough to break chunked-vs-single-call
+    bitwise equality — the engine resets the lane at admission instead.)
+
+    Returns (y (B,C,d), new_cache) with new_cache = {conv, state} holding
+    the last conv_width-1 *valid* inputs and the state after position
+    valid-1."""
+    di = d_inner_of(d_model, s)
+    nh = num_heads_of(d_model, s)
+    G, N = s.ngroups, s.state_dim
+    B_, C_, _ = x.shape
+    W = s.conv_width
+    valid = jnp.asarray(valid, jnp.int32)
+
+    z, xBC, dt = _project(p, x)
+    # causal conv with the cached history window instead of zero padding;
+    # same multiply-add order as _causal_conv (bitwise match for chunk 0)
+    win = jnp.concatenate([cache["conv"].astype(xBC.dtype), xBC], axis=1)
+    out = jnp.zeros_like(xBC, dtype=jnp.float32)
+    for i in range(W):
+        out = out + win[:, i:i + C_, :].astype(jnp.float32) \
+            * p["conv_w"][i].astype(jnp.float32)
+    xBC = jax.nn.silu(out + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    # rows [valid, valid+W-2] of win are the last W-1 valid inputs
+    new_conv = jax.lax.dynamic_slice_in_dim(win, valid, W - 1, axis=1)
+
+    xs = xBC[..., :di].reshape(B_, C_, nh, s.head_dim)
+    Bm = xBC[..., di:di + G * N].reshape(B_, C_, G, N)
+    Cm = xBC[..., di + G * N:].reshape(B_, C_, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    dt = jnp.where((jnp.arange(C_) < valid)[None, :, None], dt, 0.0)
+    A = -jnp.exp(p["A_log"])
+
+    y, final = ssd_chunked(xs, dt, A, Bm, Cm, s.chunk,
+                           init_state=cache["state"])
+    y = y + xs.astype(jnp.float32).astype(y.dtype) \
+        * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B_, C_, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm"], eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    return out, {"conv": new_conv.astype(cache["conv"].dtype),
+                 "state": final}
 
 
 # ---------------------------------------------------------------------------

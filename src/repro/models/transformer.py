@@ -165,7 +165,47 @@ def _decode_layer(p, cache, x, pos, cfg: ArchConfig, kind: str, window):
     if "mlp" in p:
         x = x + mlp_forward(p["mlp"], rms_norm(x, p["ln2"], eps))
     elif "moe" in p:
-        y, _ = moe_forward(p["moe"], rms_norm(x, p["ln2"], eps), cfg.moe)
+        # full capacity: decode routing must be drop-free so each slot's
+        # output is independent of what the other slots are decoding (the
+        # serving engine's bit-exactness contract under churn)
+        y, _ = moe_forward(p["moe"], rms_norm(x, p["ln2"], eps), cfg.moe,
+                           full_capacity=True)
+        x = x + y
+    return x, new_cache
+
+
+def _prefill_layer(p, cache, x, positions, pos0, valid_count, valid_flat,
+                   cfg: ArchConfig, kind: str, window):
+    """Whole-chunk layer application that also writes the layer cache.
+
+    x: (B,C,d); positions (B,C) absolute; pos0 scalar chunk start;
+    valid_count scalar <= C (same for every batch row); valid_flat (B*C,)
+    bool marks real (non-pad) tokens."""
+    eps = cfg.norm_eps
+    h = rms_norm(x, p["ln1"], eps)
+    new_cache = {}
+    if kind in ("dense", "moe"):
+        y, new_cache["attn"] = attn_mod.attn_prefill(
+            p["attn"], cache["attn"], h, positions, pos0, cfg, window)
+        x = x + y
+    elif kind == "ssm":
+        y, new_cache["ssm"] = ssm_mod.ssm_prefill(
+            p["ssm"], cache["ssm"], h, valid_count, cfg.d_model,
+            cfg.ssm, eps)
+        x = x + y
+    elif kind == "hybrid":
+        ya, new_cache["attn"] = attn_mod.attn_prefill(
+            p["attn"], cache["attn"], h, positions, pos0, cfg, window)
+        ys, new_cache["ssm"] = ssm_mod.ssm_prefill(
+            p["ssm"], cache["ssm"], h, valid_count, cfg.d_model,
+            cfg.ssm, eps)
+        x = x + 0.5 * (rms_norm(ya, p["fuse_na"], eps)
+                       + rms_norm(ys, p["fuse_ns"], eps))
+    if "mlp" in p:
+        x = x + mlp_forward(p["mlp"], rms_norm(x, p["ln2"], eps))
+    elif "moe" in p:
+        y, _ = moe_forward(p["moe"], rms_norm(x, p["ln2"], eps), cfg.moe,
+                           full_capacity=True, valid=valid_flat)
         x = x + y
     return x, new_cache
 
@@ -311,7 +351,9 @@ def init_decoder_cache(cfg: ArchConfig, batch: int, max_len: int):
 
 def decoder_decode_step(params, caches, tokens, pos, cfg: ArchConfig,
                         *, seq_len: int, unroll: bool = False):
-    """One decode step. tokens:(B,1) int32; pos: scalar int32 (cache index).
+    """One decode step. tokens:(B,1) int32; pos: scalar int32 (cache index
+    shared by the whole batch) or (B,) int32 per-sequence indices (the
+    serving engine's slot pool, where every sequence is at its own depth).
 
     Returns (logits (B,1,V), new_caches)."""
     dtype = dtype_of(cfg.dtype)
@@ -333,6 +375,75 @@ def decoder_decode_step(params, caches, tokens, pos, cfg: ArchConfig,
             lp, lc, w = xs
             win = _static if _static is not None else w
             x, nc = _decode_layer(lp, lc, x, pos, cfg, _kind, win)
+            return x, nc
+
+        if cfg.scan_layers and count > 1:
+            h, nc = jax.lax.scan(body, h, (stacked, cache, seg_wins),
+                                 unroll=_unroll_of(unroll, count))
+        else:
+            ncs = []
+            for j in range(count):
+                lp = jax.tree.map(lambda v: v[j], stacked)
+                lc = jax.tree.map(lambda v: v[j], cache)
+                h, nc1 = body(h, (lp, lc, seg_wins[j]))
+                ncs.append(nc1)
+            nc = jax.tree.map(lambda *vs: jnp.stack(vs), *ncs)
+        new_caches.append(nc)
+
+    h = rms_norm(h, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head.astype(dtype))
+    return logits, new_caches
+
+
+def decoder_prefill(params, caches, tokens, pos0, valid, cfg: ArchConfig,
+                    *, seq_len: int, unroll: bool = False):
+    """Chunked whole-prompt prefill: one full-sequence pass over a (B,C)
+    token chunk starting at cache position ``pos0`` that computes logits
+    for every chunk position AND writes all layer caches — replacing the
+    token-by-token forced-decode loop (C model calls, C wasted LM-head
+    projections) with a single call.
+
+    ``valid`` (scalar int32 <= C, shared by the batch) marks how many
+    leading chunk positions are real tokens; trailing pad positions are
+    excluded from SSM state updates and MoE routing, and their (garbage)
+    cache rows sit beyond the live sequence where causal masking hides
+    them until the decode steps overwrite them in order.
+
+    Long prompts run as consecutive calls with pos0 = 0, C, 2C, ...; the
+    attention chunk attends the whole cache written so far, and SSM state
+    carries through the cache. Meta-token/VLM prefixes are not applied
+    (consistent with ``decoder_decode_step``).
+
+    Returns (logits (B,C,V), new_caches)."""
+    dtype = dtype_of(cfg.dtype)
+    B, C = tokens.shape
+    h = params["embed"][tokens].astype(dtype)
+    pos0 = jnp.asarray(pos0, jnp.int32)
+    valid = jnp.asarray(valid, jnp.int32)
+    positions = jnp.broadcast_to(
+        pos0 + jnp.arange(C, dtype=jnp.int32)[None], (B, C))
+    valid_flat = jnp.broadcast_to((jnp.arange(C) < valid)[None],
+                                  (B, C)).reshape(-1)
+    wins = layer_windows(cfg, "decode", seq_len)
+    segs = segments(cfg)
+
+    li = 0
+    new_caches = []
+    for seg_idx, (kind, count) in enumerate(segs):
+        stacked = params["blocks"][seg_idx]
+        cache = caches[seg_idx]
+        seg_wins = jnp.asarray(wins[li:li + count], jnp.int32)
+        uniform = len(set(wins[li:li + count])) == 1
+        static_win = wins[li] if uniform else None
+        li += count
+
+        def body(x, xs, _kind=kind, _static=static_win):
+            lp, lc, w = xs
+            win = _static if _static is not None else w
+            x, nc = _prefill_layer(lp, lc, x, positions, pos0, valid,
+                                   valid_flat, cfg, _kind, win)
+            x = act.constrain(x)
             return x, nc
 
         if cfg.scan_layers and count > 1:

@@ -1,0 +1,22 @@
+"""``repro.serve`` — the continuous-batching inference engine.
+
+The training side of this repo keeps accelerators busy by overlapping
+communication with compute; this package applies the same thesis to
+serving: a fixed-slot request pool keeps the jitted decode step at one
+static shape (it compiles exactly once and never retraces as requests
+join/leave), chunked whole-prompt prefill replaces the token-by-token
+forced-decode loop, and per-request sampling is fused into the decode
+dispatch.
+
+- ``engine``    — :class:`Engine`: admission -> chunked prefill -> batched
+                  per-slot decode -> sampling -> eviction loop
+- ``scheduler`` — FIFO admission + slot lifecycle bookkeeping (host side)
+- ``cache``     — slot-indexed KV/SSM cache pool + mesh placement
+- ``sampling``  — fused greedy/temperature/top-k/top-p with per-request
+                  parameters and per-slot PRNG keys
+"""
+from repro.serve.engine import Engine, EngineStats
+from repro.serve.scheduler import Request, SamplingParams, SlotScheduler
+
+__all__ = ["Engine", "EngineStats", "Request", "SamplingParams",
+           "SlotScheduler"]

@@ -1,0 +1,75 @@
+"""Slot-indexed KV/SSM cache pool.
+
+The pool is just ``model.init_cache(max_slots, max_seq)`` — a pytree whose
+leaves carry (segment-stacked) ``(layers, slots, ...)`` axes — plus the
+three operations the engine needs:
+
+- ``slot_view`` / ``slot_write``: gather one slot's (1, ...) cache slice
+  out of the pool and scatter it back, so chunked prefill can run the
+  batched model path against a single lane via ``dynamic_update_slice``
+  (works unchanged for GQA k/v, MLA latent, and SSM conv/state leaves —
+  the slot axis is the batch axis everywhere).
+- ``reset_slot``: zero one lane — the hand-off between requests. The
+  engine runs it at admission: causal masking hides a previous occupant's
+  stale attention rows on its own, but the SSM conv/state lane carries
+  across prefill chunks by design and must start from zeros.
+- ``pool_shardings``: mesh placement through ``repro.dist`` — slots over
+  the data axes, head-like dims over ``model``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import cache_shardings
+
+
+def make_pool(model, max_slots: int, max_seq: int):
+    """Allocate the cache pool: one lane per slot, ``max_seq`` rows each."""
+    return model.init_cache(max_slots, max_seq)
+
+
+def slot_axis_of(leaf) -> int:
+    """Slot (batch) axis index of a pool leaf: the decoder stacks segment
+    caches as (layer, slot, ...), so it is axis 1 for every leaf."""
+    del leaf
+    return 1
+
+
+def slot_view(pool, slot):
+    """Extract slot ``slot`` as a batch-1 cache pytree (traceable)."""
+    return jax.tree.map(
+        lambda v: jax.lax.dynamic_slice_in_dim(v, slot, 1,
+                                               axis=slot_axis_of(v)), pool)
+
+
+def slot_write(pool, slot, view):
+    """Scatter a batch-1 cache pytree back into the pool at ``slot``."""
+    return jax.tree.map(
+        lambda v, u: jax.lax.dynamic_update_slice_in_dim(
+            v, u.astype(v.dtype), slot, axis=slot_axis_of(v)), pool, view)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def reset_slot(pool, slot):
+    """Zero one lane of the pool (all layers, all leaves)."""
+    def leaf(v):
+        ax = slot_axis_of(v)
+        zeros = jnp.zeros(v.shape[:ax] + (1,) + v.shape[ax + 1:], v.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(v, zeros, slot, axis=ax)
+    return jax.tree.map(leaf, pool)
+
+
+def pool_shardings(mesh, pool, max_slots: int):
+    """NamedShardings for the pool: slot dim over data axes, KV heads /
+    MLA latent / SSM heads over ``model`` (see ``repro.dist.sharding``)."""
+    return cache_shardings(mesh, pool, max_slots)
+
+
+def place_pool(mesh, pool, max_slots: int):
+    """Device-put the pool onto its serve-mesh shardings."""
+    if mesh is None:
+        return pool
+    return jax.device_put(pool, pool_shardings(mesh, pool, max_slots))

@@ -1,0 +1,279 @@
+"""Continuous-batching decode engine.
+
+Design contract (the reason this engine never recompiles):
+
+- **Fixed-slot request pool.** The jitted decode step always sees
+  ``(max_slots, 1)`` tokens, a ``(max_slots,)`` position vector, the full
+  cache pool, and ``(max_slots,)`` sampling-parameter vectors. Requests
+  joining or leaving only change the *values* in those arrays, never a
+  shape — the step compiles exactly once per process (asserted in
+  ``tests/test_serve.py`` via ``trace_counts``).
+- **Per-slot positions.** Every lane decodes at its own depth
+  (``decoder_decode_step`` with a (B,) position vector); a freed lane is
+  reused immediately by the next queued request.
+- **Chunked whole-prompt prefill.** A new request's prompt is written into
+  its slot's cache lane by ``model.chunk_prefill`` in ``prefill_chunk``-
+  token chunks — one model call per chunk instead of one per token, with
+  the LM head applied once. For SSM/hybrid families the chunk is rounded
+  up to a multiple of ``cfg.ssm.chunk`` so the SSD block decomposition
+  aligns with a single-call prefill bit-for-bit.
+- **Slot-independent numerics.** Greedy decode of a request is bit-exact
+  with ``repro.train.serve.generate`` on the same prompt no matter what
+  the other slots are doing (MoE routes drop-free at decode/prefill;
+  attention/SSM lanes are batch-independent) — the property the parity
+  tests pin per family.
+
+Sampling is fused into the decode dispatch: greedy/temperature/top-k/top-p
+with per-request parameters and per-slot PRNG keys in the same jit
+(``fused_sampling=True`` additionally routes the greedy/temperature fast
+path through the ``slot_gather`` Pallas kernel).
+
+The engine is synchronous: admission and prefill happen between decode
+steps (a prefill stall bounded by ``prefill_chunk``), which keeps the loop
+deterministic and testable; see DESIGN.md "Serving engine" for the slot
+lifecycle diagram.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve import cache as cache_mod
+from repro.serve import sampling as sampling_mod
+from repro.serve.scheduler import Request, SamplingParams, SlotScheduler
+
+
+STATS_WINDOW = 4096   # decode steps of latency history kept for percentiles
+
+
+@dataclass
+class EngineStats:
+    prefill_tokens: int = 0
+    prefill_time: float = 0.0
+    decoded_tokens: int = 0
+    decode_time: float = 0.0
+    steps: int = 0
+    # bounded windows (a long-running server must not grow per step):
+    # seconds per dispatch / live tokens per dispatch
+    step_times: deque = field(
+        default_factory=lambda: deque(maxlen=STATS_WINDOW))
+    step_tokens: deque = field(
+        default_factory=lambda: deque(maxlen=STATS_WINDOW))
+
+    def prefill_tok_s(self) -> float:
+        return self.prefill_tokens / max(self.prefill_time, 1e-9)
+
+    def decode_tok_s(self) -> float:
+        return self.decoded_tokens / max(self.decode_time, 1e-9)
+
+    def token_latency_percentiles(self, qs=(50, 99)) -> dict:
+        """Per-token latency over the stats window: each live token in a
+        step experienced that step's wall time."""
+        if not self.step_times:
+            return {q: 0.0 for q in qs}
+        lats = np.repeat(np.fromiter(self.step_times, np.float64),
+                         np.fromiter(self.step_tokens, np.int64))
+        return {q: float(np.percentile(lats, q)) for q in qs}
+
+
+class Engine:
+    """Continuous-batching inference engine over a fixed slot pool."""
+
+    def __init__(self, model, params, *, max_slots: int = 8,
+                 max_seq: int = 256, prefill_chunk: int = 32,
+                 mesh=None, fused_sampling: bool = False,
+                 unroll: bool = False):
+        cfg = model.cfg
+        if cfg.family != "decoder":
+            raise ValueError(f"serve engine supports decoder models, "
+                             f"got family={cfg.family!r}")
+        if cfg.ssm is not None and prefill_chunk % cfg.ssm.chunk:
+            # SSD block boundaries must align across chunked calls for the
+            # cache state to match a single-call prefill bitwise
+            prefill_chunk += cfg.ssm.chunk - prefill_chunk % cfg.ssm.chunk
+        if max_seq % prefill_chunk:
+            # every chunk writes a full [pos0, pos0+C) window; if the last
+            # window could cross max_seq, dynamic_update_slice would clamp
+            # pos0 and silently overwrite earlier prompt rows — round the
+            # pool up so ceil(S0/C)*C <= max_seq for any admissible S0
+            max_seq += prefill_chunk - max_seq % prefill_chunk
+        self.model = model
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.prefill_chunk = prefill_chunk
+        self.mesh = mesh
+        self.fused_sampling = fused_sampling
+        self.unroll = unroll
+        self.trace_counts = {"prefill": 0, "decode": 0, "sample": 0}
+
+        if mesh is not None:
+            from repro.dist.sharding import param_shardings
+            params = jax.device_put(params, param_shardings(mesh, params))
+        self.params = params
+        self.pool = cache_mod.place_pool(
+            mesh, cache_mod.make_pool(model, max_slots, max_seq), max_slots)
+        self.sched = SlotScheduler(max_slots, max_seq)
+        self.stats = EngineStats()
+
+        # per-slot sampling state (host mirrors; uploaded per dispatch)
+        self._temps = np.zeros((max_slots,), np.float32)
+        self._top_ks = np.zeros((max_slots,), np.int32)
+        self._top_ps = np.ones((max_slots,), np.float32)
+        self._keys = jnp.zeros((max_slots, 2), jnp.uint32)
+
+        self._prefill = jax.jit(self._prefill_fn, donate_argnums=(1,))
+        self._decode = jax.jit(self._decode_fn, donate_argnums=(1,))
+        self._sample_prefill = jax.jit(self._sample_prefill_fn)
+
+    # -- traced steps -------------------------------------------------------
+
+    def _prefill_fn(self, params, pool, tokens, slot, pos0, valid):
+        """One prompt chunk into one slot's cache lane."""
+        self.trace_counts["prefill"] += 1
+        view = cache_mod.slot_view(pool, slot)
+        logits, view = self.model.chunk_prefill(
+            params, view, tokens, pos0, valid, seq_len=self.max_seq,
+            unroll=self.unroll)
+        return cache_mod.slot_write(pool, slot, view), logits
+
+    def _sample_prefill_fn(self, logits, valid, temp, top_k, top_p, key):
+        """Sample the prompt continuation from the last valid prefill row."""
+        self.trace_counts["sample"] += 1
+        k_use, k_next = jax.random.split(key)
+        if self.fused_sampling:
+            from repro.kernels.slot_gather import slot_gather_sample
+            C = logits.shape[1]
+            onehot = (jnp.arange(C) == valid - 1).astype(jnp.float32)[None]
+            noise = jax.random.gumbel(k_use, (1, logits.shape[-1]),
+                                      jnp.float32)
+            greedy, sampled = slot_gather_sample(logits, onehot,
+                                                 temp[None], noise)
+            tok = jnp.where(temp <= 0.0, greedy[0], sampled[0])
+        else:
+            row = jax.lax.dynamic_index_in_dim(logits[0], valid - 1, axis=0,
+                                               keepdims=False)
+            noise = jax.random.gumbel(k_use, (1, row.shape[-1]), jnp.float32)
+            tok = sampling_mod.sample_tokens(
+                row[None], temp[None], top_k[None], top_p[None], noise)[0]
+        return tok, k_next
+
+    def _decode_fn(self, params, pool, tokens, pos, temps, top_ks, top_ps,
+                   keys):
+        """One decode step for the whole slot pool + fused sampling."""
+        self.trace_counts["decode"] += 1
+        logits, pool = self.model.decode_step(
+            params, pool, {"tokens": tokens}, pos, seq_len=self.max_seq,
+            unroll=self.unroll)
+        ks = jax.vmap(jax.random.split)(keys)        # (S, 2, 2)
+        k_use, k_next = ks[:, 0], ks[:, 1]
+        # all-greedy steps (the default) skip the (S, V) Gumbel draw
+        noise = jax.lax.cond(
+            jnp.any(temps > 0.0),
+            lambda k: sampling_mod.gumbel_noise(k, logits.shape[-1]),
+            lambda k: jnp.zeros((keys.shape[0], logits.shape[-1]),
+                                jnp.float32), k_use)
+        if self.fused_sampling:
+            from repro.kernels.slot_gather import slot_gather_sample
+            onehot = jnp.ones((logits.shape[0], 1), jnp.float32)
+            greedy, sampled = slot_gather_sample(logits, onehot, temps,
+                                                 noise)
+            tok = jnp.where(temps <= 0.0, greedy, sampled)
+        else:
+            tok = sampling_mod.sample_tokens(logits[:, 0, :], temps, top_ks,
+                                             top_ps, noise)
+        return pool, tok, k_next
+
+    # -- host loop ----------------------------------------------------------
+
+    def submit(self, tokens, max_new: int,
+               sampling: SamplingParams | None = None,
+               eos: int | None = None) -> int:
+        sampling = sampling or SamplingParams()
+        if self.fused_sampling and sampling_mod.needs_full_path(sampling):
+            raise ValueError("fused_sampling engine handles greedy/"
+                             "temperature only; top-k/top-p need the full "
+                             "path (fused_sampling=False)")
+        req = Request(tokens=list(map(int, tokens)), max_new=max_new,
+                      sampling=sampling, eos=eos)
+        return self.sched.submit(req)
+
+    def _bind_slot(self, slot: int, req: Request) -> None:
+        s = req.sampling
+        self._temps[slot] = s.temperature
+        self._top_ks[slot] = s.top_k
+        self._top_ps[slot] = s.top_p
+        # seed only — a request's sample stream is a pure function of
+        # (params, prompt, seed), independent of submission order
+        self._keys = self._keys.at[slot].set(jax.random.PRNGKey(s.seed))
+
+    def _prefill_request(self, slot: int, req: Request) -> None:
+        self._bind_slot(slot, req)
+        toks = np.asarray(req.tokens, np.int32)
+        S0, C = len(req.tokens), self.prefill_chunk
+        t0 = time.perf_counter()
+        # zero the lane: SSM state/conv carry across prefill chunks by
+        # design, so a previous occupant's state must not leak in (causal
+        # masking already hides stale attention rows; zeroing them too is
+        # free here)
+        self.pool = cache_mod.reset_slot(self.pool, jnp.int32(slot))
+        logits = None
+        for c in range(0, S0, C):
+            sl = toks[c:c + C]
+            valid = len(sl)
+            if valid < C:
+                sl = np.pad(sl, (0, C - valid))
+            self.pool, logits = self._prefill(
+                self.params, self.pool, jnp.asarray(sl[None]),
+                jnp.int32(slot), jnp.int32(c), jnp.int32(valid))
+        tok, k_next = self._sample_prefill(
+            logits, jnp.int32(valid), jnp.float32(req.sampling.temperature),
+            jnp.int32(req.sampling.top_k), jnp.float32(req.sampling.top_p),
+            self._keys[slot])
+        tok = int(tok)
+        self._keys = self._keys.at[slot].set(k_next)
+        self.stats.prefill_time += time.perf_counter() - t0
+        self.stats.prefill_tokens += S0
+        self.sched.record_first_token(slot, tok)
+
+    def step(self) -> int:
+        """Admit + prefill new requests, run one decode dispatch over the
+        pool. Returns the number of live tokens produced."""
+        for slot, req in self.sched.admit():
+            self._prefill_request(slot, req)
+        n_active = self.sched.num_active
+        if n_active == 0:
+            return 0
+        tokens = jnp.asarray(self.sched.feed_tokens(),
+                             jnp.int32)[:, None]
+        pos = jnp.asarray(self.sched.positions(), jnp.int32)
+        t0 = time.perf_counter()
+        self.pool, tok, self._keys = self._decode(
+            self.params, self.pool, tokens, pos,
+            jnp.asarray(self._temps), jnp.asarray(self._top_ks),
+            jnp.asarray(self._top_ps), self._keys)
+        tok = np.asarray(tok)                         # sync point
+        dt = time.perf_counter() - t0
+        self.sched.record_step(tok)
+        self.stats.steps += 1
+        self.stats.decode_time += dt
+        self.stats.decoded_tokens += n_active
+        self.stats.step_times.append(dt)
+        self.stats.step_tokens.append(n_active)
+        return n_active
+
+    def run(self) -> dict:
+        """Drive to completion; returns {request id: generated tokens}."""
+        while self.sched.has_work():
+            self.step()
+        return self.sched.results()
+
+    def reset_stats(self) -> None:
+        """Zero the timing stats (post-warmup). ``trace_counts`` is *not*
+        reset: compile-once is a property of the engine's lifetime."""
+        self.stats = EngineStats()

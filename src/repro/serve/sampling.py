@@ -1,0 +1,73 @@
+"""Fused per-slot sampling: greedy / temperature / top-k / top-p with
+per-request parameters and per-slot PRNG keys.
+
+One traced function handles the whole slot pool in a single dispatch —
+every slot carries its own (temperature, top_k, top_p) and its own key, so
+heterogeneous requests batch together without retracing. Temperature
+sampling is Gumbel-max (``argmax(logits/T + g)``), which makes the fused
+Pallas kernel (``repro.kernels.slot_gather``) and this reference path
+bit-comparable given shared noise, and makes the whole pipeline
+deterministic under fixed per-request seeds.
+
+Top-k/top-p need a sort over the vocab and stay on the jnp path; the
+kernel covers the hot greedy/temperature fast path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def gumbel_noise(keys, vocab: int):
+    """Per-slot Gumbel noise: keys (S,) typed PRNG keys -> (S, V) fp32."""
+    return jax.vmap(lambda k: jax.random.gumbel(k, (vocab,), jnp.float32))(
+        keys)
+
+
+def sample_tokens(logits, temperature, top_k, top_p, noise):
+    """Sample one token per slot.
+
+    logits: (S, V); temperature (S,) fp32 (0 = greedy); top_k (S,) int32
+    (0 = off); top_p (S,) fp32 (>= 1 = off); noise (S, V) Gumbel.
+    Returns (S,) int32."""
+    lg = logits.astype(jnp.float32)
+    S, V = lg.shape
+    greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+
+    t = jnp.maximum(temperature, 1e-6)[:, None]
+    scaled = lg / t
+
+    def apply_filters(scaled):
+        # top-k: mask below the k-th largest (k = V when disabled)
+        sorted_desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+        k = jnp.where(top_k > 0, jnp.clip(top_k, 1, V), V)
+        kth = jnp.take_along_axis(sorted_desc, (k - 1)[:, None], axis=-1)
+        masked = jnp.where(scaled >= kth, scaled, NEG_INF)
+
+        # top-p (nucleus) over the top-k-masked distribution: keep tokens
+        # whose exclusive prefix mass (sorted descending) is still below p
+        # — always at least one, and p >= 1 keeps everything (fp-safe: the
+        # inclusive cumsum may never reach 1.0 exactly)
+        probs = jax.nn.softmax(masked, axis=-1)
+        sp = jnp.sort(probs, axis=-1)[:, ::-1]
+        csum = jnp.cumsum(sp, axis=-1)
+        p = jnp.clip(top_p, 0.0, 1.0)[:, None]
+        n_keep = jnp.maximum(jnp.sum((csum - sp) < p, axis=-1), 1)
+        pth = jnp.take_along_axis(sp, (n_keep - 1)[:, None], axis=-1)
+        return jnp.where(probs >= pth, masked, NEG_INF)
+
+    # the vocab sorts run only when some slot actually filters (disabled
+    # filters are identities); lax.cond keeps the trace static while the
+    # all-greedy/plain-temperature hot path skips them at runtime
+    masked = jax.lax.cond(jnp.any((top_k > 0) | (top_p < 1.0)),
+                          apply_filters, lambda s: s, scaled)
+
+    sampled = jnp.argmax(masked + noise, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature <= 0.0, greedy, sampled)
+
+
+def needs_full_path(sampling) -> bool:
+    """Whether a request's params require the sort-based jnp path."""
+    return sampling.top_k > 0 or sampling.top_p < 1.0

@@ -1,0 +1,147 @@
+"""Slot scheduler: FIFO admission, per-slot position/length tracking, and
+mid-flight eviction of finished sequences.
+
+All host-side bookkeeping, deliberately free of jax: the engine owns the
+device arrays, the scheduler owns the request lifecycle —
+
+    queued -> (admit) -> prefilling -> decoding -> (finish) -> freed
+
+A slot is a lane of the engine's fixed-size batch. Freed slots are reused
+immediately by the next queued request; the decode step's shapes never
+change, only the per-slot position/active vectors the scheduler exports.
+"""
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling configuration.
+
+    temperature == 0 is greedy; top_k == 0 and top_p >= 1 disable the
+    respective filters. ``seed`` makes the request's sample stream
+    deterministic (per-slot PRNG keys are folded from it)."""
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+
+@dataclass
+class Request:
+    tokens: list          # prompt token ids
+    max_new: int
+    sampling: SamplingParams = field(default_factory=SamplingParams)
+    eos: int | None = None     # stop token (None: run to max_new)
+    rid: int = -1              # assigned by the scheduler at submit
+
+
+@dataclass
+class SlotState:
+    """One live request bound to a slot."""
+    req: Request
+    pos: int = 0               # next cache write index (== tokens decoded)
+    generated: list = field(default_factory=list)
+    last_token: int = 0        # token to feed at the next decode step
+    done: bool = False
+
+
+class SlotScheduler:
+    """FIFO over a fixed pool of ``max_slots`` decode lanes."""
+
+    def __init__(self, max_slots: int, max_seq: int):
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.pending: deque[Request] = deque()
+        self.slots: list[SlotState | None] = [None] * max_slots
+        self.finished: dict[int, SlotState] = {}
+        self._rid = itertools.count()
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, req: Request) -> int:
+        if not req.tokens:
+            raise ValueError("empty prompt")
+        if req.max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        if len(req.tokens) + req.max_new > self.max_seq:
+            raise ValueError(
+                f"request needs {len(req.tokens) + req.max_new} cache rows, "
+                f"pool holds {self.max_seq}")
+        req.rid = next(self._rid)
+        self.pending.append(req)
+        return req.rid
+
+    # -- admission ----------------------------------------------------------
+
+    def free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def admit(self) -> list[tuple[int, Request]]:
+        """Bind queued requests to free slots (FIFO). Returns the new
+        (slot, request) pairs; the engine prefill-fills each one."""
+        placed = []
+        for slot in self.free_slots():
+            if not self.pending:
+                break
+            req = self.pending.popleft()
+            self.slots[slot] = SlotState(req=req, pos=len(req.tokens),
+                                         last_token=req.tokens[-1])
+            placed.append((slot, req))
+        return placed
+
+    # -- decode bookkeeping -------------------------------------------------
+
+    @property
+    def num_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def has_work(self) -> bool:
+        return bool(self.pending) or self.num_active > 0
+
+    def active_mask(self) -> list[bool]:
+        return [s is not None for s in self.slots]
+
+    def positions(self) -> list[int]:
+        """Per-slot cache write index for the next decode step. Idle slots
+        park at 0 — they rewrite (and causally hide) row 0 until reused."""
+        return [s.pos if s is not None else 0 for s in self.slots]
+
+    def feed_tokens(self) -> list[int]:
+        return [s.last_token if s is not None else 0 for s in self.slots]
+
+    def record_first_token(self, slot: int, token: int) -> None:
+        """The prompt's continuation sampled from the prefill logits."""
+        self._record(slot, token)
+
+    def record_step(self, tokens) -> list[int]:
+        """Fold one decode step's sampled token per slot into the state.
+        Advances positions, finishes/evicts, returns freed slots."""
+        freed = []
+        for slot, st in enumerate(self.slots):
+            if st is None or st.done:
+                continue
+            st.pos += 1          # the step wrote cache row st.pos
+            self._record(slot, int(tokens[slot]))
+            if self.slots[slot] is None:
+                freed.append(slot)
+        return freed
+
+    def _record(self, slot: int, token: int) -> None:
+        st = self.slots[slot]
+        st.generated.append(token)
+        st.last_token = token
+        req = st.req
+        if (len(st.generated) >= req.max_new
+                or (req.eos is not None and token == req.eos)):
+            st.done = True
+            self.finished[req.rid] = st
+            self.slots[slot] = None    # evict mid-flight; slot reusable
+
+    # -- results ------------------------------------------------------------
+
+    def results(self) -> dict[int, list]:
+        return {rid: st.generated for rid, st in self.finished.items()}

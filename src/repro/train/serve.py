@@ -1,4 +1,13 @@
-"""Serving: batched autoregressive decode against a KV/SSM cache."""
+"""Serving: batched autoregressive decode against a KV/SSM cache.
+
+``generate`` is the functional reference path and the serving engine's
+greedy parity oracle (``repro.serve.engine`` must match it bit-for-bit per
+request). Prefill is one batched ``chunk_prefill`` call that writes every
+layer's cache in a single pass — the old loop issued one ``serve()`` call
+per forced prompt token, paying S0 model dispatches and S0 wasted LM-head
+projections for logits it threw away (``_generate_stepwise`` keeps that
+path as the cross-check oracle for the prefill rewrite itself).
+"""
 from __future__ import annotations
 
 import functools
@@ -26,8 +35,33 @@ def make_serve_step(model: Model, *, seq_len: int, unroll: bool = False):
 
 def generate(model: Model, params, prompt, *, max_new: int, seq_len: int,
              mesh=None):
-    """Greedy generation: prefill the prompt token-by-token (functional
-    reference path), then decode ``max_new`` tokens."""
+    """Greedy generation: one whole-prompt prefill call, then decode
+    ``max_new`` tokens. Families without a chunked prefill (encdec) keep
+    the token-by-token forced-decode path."""
+    if model.chunk_prefill is None:
+        return _generate_stepwise(model, params, prompt, max_new=max_new,
+                                  seq_len=seq_len)
+    B, S0 = prompt.shape
+    total = S0 + max_new
+    cache = model.init_cache(B, total)
+    serve = jax.jit(make_serve_step(model, seq_len=total))
+    prefill = jax.jit(functools.partial(model.chunk_prefill,
+                                        seq_len=total))
+    logits, cache = prefill(params, cache, prompt, jnp.int32(0),
+                            jnp.int32(S0))
+    tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+    out = [prompt, tok]
+    for i in range(S0, total - 1):
+        tok, cache = serve(params, cache, tok, jnp.int32(i))
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+def _generate_stepwise(model: Model, params, prompt, *, max_new: int,
+                       seq_len: int):
+    """Token-by-token forced-prefill reference (the pre-rewrite ``generate``
+    semantics): one decode call per prompt token, logits discarded. Kept as
+    the oracle proving the one-call prefill preserves outputs."""
     B, S0 = prompt.shape
     total = S0 + max_new
     cache = model.init_cache(B, total)
