@@ -5,7 +5,8 @@ Prints ``name,us_per_call,derived`` CSV:
                     RS->update->AG step pipelines)
 - bench_overlap  -> §3.2 overlap: exposed comm, overlapped vs serialized
 - bench_scaling  -> Table 1 (speedup vs #workers)
-- bench_easgd    -> §4 async (EASGD overhead / tau)
+- bench_easgd    -> §4 async (engine-driven EASGD/ASGD tau sweep, fp16-wire
+                    center exchange through the shared exchanger layer)
 - bench_loading  -> §3.3 Alg 1 (parallel loading)
 - bench_kernels  -> kernel micro-bench
 - bench_dist     -> sharding spec construction (repro.dist) on the largest
@@ -15,9 +16,11 @@ Prints ``name,us_per_call,derived`` CSV:
                     guard)
 
 ``--quick`` runs the CI smoke subset (bench_comm + bench_overlap +
-bench_serve at reduced scale); ``--json PATH`` additionally writes the
+bench_easgd + bench_serve at reduced scale); ``--json PATH`` additionally
+writes the
 rows as JSON so the perf trajectory accumulates as artifacts
-(``BENCH_*.json``).
+(``BENCH_*.json`` — async throughput rows land alongside comm/overlap/
+serve).
 """
 import argparse
 import inspect
@@ -40,8 +43,8 @@ if _SRC not in sys.path:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
-                    help="CI smoke subset: bench_comm + bench_overlap "
-                         "at reduced scale")
+                    help="CI smoke subset: bench_comm + bench_overlap + "
+                         "bench_easgd + bench_serve at reduced scale")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as JSON (perf-trajectory "
                          "artifact)")
@@ -52,7 +55,7 @@ def main() -> None:
                             bench_scaling, bench_serve)
     if args.quick:
         modules = [("comm", bench_comm), ("overlap", bench_overlap),
-                   ("serve", bench_serve)]
+                   ("easgd", bench_easgd), ("serve", bench_serve)]
     else:
         modules = [("comm", bench_comm), ("overlap", bench_overlap),
                    ("scaling", bench_scaling), ("easgd", bench_easgd),

@@ -30,7 +30,8 @@ def _flatten(tree):
     return flat
 
 
-def save_checkpoint(path: str, state, step: int | None = None):
+def save_checkpoint(path: str, state, step: int | None = None,
+                    algo: str | None = None):
     os.makedirs(path, exist_ok=True)
     flat = _flatten(state)
 
@@ -41,6 +42,8 @@ def save_checkpoint(path: str, state, step: int | None = None):
     np.savez(os.path.join(path, "state.npz"), **arrays)
     meta = {"step": int(step) if step is not None else 0,
             "keys": sorted(arrays.keys())}
+    if algo is not None:
+        meta["algo"] = algo
     with open(os.path.join(path, "meta.json"), "w") as f:
         json.dump(meta, f)
 
@@ -52,8 +55,10 @@ def restore_checkpoint(path: str, state_like):
     missing = set(flat_like) - set(data.files)
     extra = set(data.files) - set(flat_like)
     if missing or extra:
-        raise ValueError(f"checkpoint mismatch: missing={sorted(missing)[:5]} "
-                         f"extra={sorted(extra)[:5]}")
+        raise ValueError(
+            f"checkpoint layout mismatch (written by a different "
+            f"TrainPlan/algo?): missing={sorted(missing)[:5]} "
+            f"extra={sorted(extra)[:5]}")
 
     leaves, treedef = jax.tree.flatten(state_like)
     flat_keys = list(_flatten(state_like).keys())
@@ -65,10 +70,10 @@ def restore_checkpoint(path: str, state_like):
         target_dtype = like.dtype
         a = jax.numpy.asarray(arr).astype(target_dtype)
         if hasattr(like, "sharding") and like.sharding is not None:
-            try:
-                a = jax.device_put(a, like.sharding)
-            except Exception:
-                pass
+            # no fallback: a failed placement (e.g. the checkpointing mesh
+            # is gone) must fail loudly — the resume contract promises the
+            # restored state lands on ``state_like``'s shardings
+            a = jax.device_put(a, like.sharding)
         restored_flat[k] = a
 
     def rebuild(prefix, node):
@@ -83,6 +88,42 @@ def restore_checkpoint(path: str, state_like):
     return rebuild("", state_like)
 
 
-def latest_step(path: str) -> int:
+def load_meta(path: str) -> dict:
     with open(os.path.join(path, "meta.json")) as f:
-        return json.load(f)["step"]
+        return json.load(f)
+
+
+def latest_step(path: str) -> int:
+    return load_meta(path)["step"]
+
+
+def restore_for_resume(path: str, state_like, expect_algo: str | None = None):
+    """Resume entry point for the training engine: restore ``state_like``'s
+    layout (structure, dtypes, shardings) from ``path`` and return
+    ``(state, start_step)``.
+
+    ``expect_algo`` guards against resuming under the wrong algorithm when
+    the layouts happen to coincide (bsp and gspmd share ``params/opt/step``
+    exactly; easgd and asgd share the ``center`` layout) — the key check
+    alone cannot tell those apart, the recorded meta can.
+
+    ``start_step`` comes from the checkpoint meta and is cross-checked
+    against the restored ``state["step"]`` counter — the loop folds the rng
+    with the global step index, so a wrong offset would silently change
+    the data/rng schedule instead of replaying the uninterrupted run."""
+    meta = load_meta(path)
+    recorded = meta.get("algo")
+    if (expect_algo is not None and recorded is not None
+            and recorded != expect_algo):
+        raise ValueError(
+            f"checkpoint algo mismatch: {path!r} was written by a "
+            f"{recorded!r} plan, cannot resume as {expect_algo!r}")
+    state = restore_checkpoint(path, state_like)
+    step = int(meta.get("step", 0))
+    if isinstance(state, dict) and "step" in state:
+        in_state = int(np.asarray(state["step"]))
+        if in_state != step:
+            raise ValueError(
+                f"checkpoint step mismatch: meta.json says {step} but "
+                f"state['step'] is {in_state} ({path!r})")
+    return state, step

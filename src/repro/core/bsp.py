@@ -37,7 +37,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.exchanger import (Exchanger, RSPlan, default_chunk_sum,
-                                  make_rs_plan, param_wire_dtype)
+                                  make_rs_plan, norm_axes, param_wire_dtype)
 from repro.models.registry import Model
 from repro.optim.optimizers import Optimizer
 
@@ -46,11 +46,6 @@ def init_train_state(model: Model, optimizer: Optimizer, key):
     params = model.init(key)
     return {"params": params, "opt": optimizer.init(params),
             "step": jnp.zeros((), jnp.int32)}
-
-
-def _norm_axes(data_axes):
-    axes = tuple(data_axes)
-    return axes[0] if len(axes) == 1 else axes
 
 
 def _model_plan(model: Model, mesh, data_axes, bucket_bytes: int) -> RSPlan:
@@ -149,7 +144,7 @@ def make_bsp_step(model: Model, optimizer: Optimizer, exchanger: Exchanger,
     if sharded_update and scheme != "subgd":
         raise ValueError("sharded_update requires scheme='subgd' "
                          "(awagd updates on the local gradient)")
-    axes = _norm_axes(data_axes)
+    axes = norm_axes(data_axes)
     ax_rs = data_axes[-1]
 
     def grad_of(params, batch, rng):
@@ -382,7 +377,7 @@ def make_loss_grad_step(model: Model, exchanger: Exchanger, mesh,
                         data_axes=("data",), sum_fn=default_chunk_sum):
     """Exchange-only step (gradient computation + exchange, no update) —
     used by the communication benchmarks to isolate exchange cost."""
-    axes = _norm_axes(data_axes)
+    axes = norm_axes(data_axes)
 
     def per_shard(params, batch, rng):
         (_, _), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(

@@ -1,14 +1,44 @@
-"""Elastic Averaging SGD (paper §4; Zhang et al. 2015).
+"""Async training plans: EASGD (paper §4; Zhang et al. 2015) and ASGD.
 
 Theano-MPI re-implements Platoon's EASGD over CUDA-aware MPI SendRecv. The
-TPU/SPMD adaptation keeps per-worker parameter replicas as a leading axis
-sharded over the data axis; the elastic attraction to the replicated center
-runs every ``tau`` steps (the averaging period) as a psum — a synchronous
-clock emulation of bounded-staleness asynchrony (the paper itself equates
-larger tau with larger effective batch).
+TPU/SPMD adaptation keeps per-worker parameter *and optimizer-state*
+replicas as a leading worker axis sharded over the data axes; the elastic
+attraction to the replicated center runs every ``tau`` steps (the
+averaging period) — a synchronous clock emulation of bounded-staleness
+asynchrony (the paper itself equates larger tau with larger effective
+batch).
 
-Worker update :  x_i <- x_i - eta*g_i - alpha*(x_i - center)   (every tau)
-Center update :  center <- center + alpha * sum_i (x_i - center)
+Promoted to first-class (engine) status:
+
+- the per-worker descent goes through the shared :class:`Optimizer`
+  interface (momentum-SGD *and* AdamW), not an inline update;
+- the center traffic routes through :class:`Exchanger` — the ASA
+  decomposition and fp16/int8 wire precision apply to the elastic
+  exchange exactly as they do to BSP gradients;
+- the state uses the engine's canonical layout (``params/opt/step`` +
+  the ``center`` extra), so checkpoint save/resume is shared.
+
+Sync-step semantics (server-style ordering: the center absorbs the worker
+deltas first, workers then attract to the *updated* center — what a
+Platoon worker observes after its round trip):
+
+    delta_i = x_i - c
+    c'      = c + alpha * sum_i delta_i     (exchanger: mean * k)
+    x_i'    = x_i - alpha * (x_i - c')
+
+``algo="asgd"`` is the ``alpha = 1`` point of the same scaffolding: the
+center applies the full sum of worker deltas (each worker's accumulated
+local updates since its last sync — staleness bounded by tau) and the
+workers re-fetch the center. At ``tau = 1`` that collapses to synchronous
+model averaging, which from a synced start equals BSP gradient averaging
+with the learning rate scaled by ``k`` (momentum/Adam states stay local
+but their mean tracks the BSP state by linearity) — the parity tested in
+``tests/test_engine.py``.
+
+The local (non-averaging) step is a *separate* function with no
+param-sized collective at all — the engine dispatches sync vs local by
+``step_idx % tau``, so at tau > 1 the wire really is idle between
+averaging rounds (measured in ``benchmarks/bench_easgd.py``).
 """
 from __future__ import annotations
 
@@ -16,74 +46,119 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.exchanger import Exchanger, default_chunk_sum, norm_axes
 from repro.models.registry import Model
 from repro.optim.optimizers import Optimizer
 
 
-def init_easgd_state(model: Model, optimizer: Optimizer, key, num_workers: int):
+def init_async_state(model: Model, optimizer: Optimizer, key,
+                     num_workers: int, *, mesh=None, data_axes=("data",)):
+    """Canonical engine layout + the async extras.
+
+    ``params``/``opt`` are per-worker replica stacks (leading worker dim of
+    extent ``num_workers``, sharded over the data axes when ``mesh`` is
+    given); ``center`` is the replicated center replica."""
     params = model.init(key)
     stack = lambda p: jnp.broadcast_to(p[None], (num_workers, *p.shape))
-    workers = jax.tree.map(stack, params)
-    return {
-        "workers": workers,
-        "opt": jax.tree.map(stack, optimizer.init(params)["m"]),
-        "center": params,
-        "step": jnp.zeros((), jnp.int32),
-    }
+    state = {"params": jax.tree.map(stack, params),
+             "opt": jax.tree.map(stack, optimizer.init(params)),
+             "center": params,
+             "step": jnp.zeros((), jnp.int32)}
+    if mesh is not None:
+        worker = NamedSharding(mesh, P(norm_axes(data_axes)))
+        rep = NamedSharding(mesh, P())
+        put = lambda sh: (lambda l: jax.device_put(l, sh))
+        state = {"params": jax.tree.map(put(worker), state["params"]),
+                 "opt": jax.tree.map(put(worker), state["opt"]),
+                 "center": jax.tree.map(put(rep), state["center"]),
+                 "step": jax.device_put(state["step"], rep)}
+    return state
 
 
-def make_easgd_step(model: Model, lr_fn: Callable, mesh,
-                    alpha: float = 0.5, tau: int = 1,
-                    momentum: float = 0.9, data_axis: str = "data"):
-    """Returns ``step(state, batch, rng) -> (state, metrics)``."""
+def make_async_step(model: Model, optimizer: Optimizer, exchanger: Exchanger,
+                    lr_fn: Callable, mesh, *, algo: str = "easgd",
+                    alpha: float = 0.5, data_axes=("data",),
+                    sum_fn=default_chunk_sum, bucket_bytes: int = 0,
+                    unroll: bool = False):
+    """Returns ``(local_step, sync_step)``, both un-jitted.
 
-    def per_shard(state, batch, rng):
-        rng = jax.random.fold_in(rng, jax.lax.axis_index(data_axis))
-        w = jax.tree.map(lambda v: v[0], state["workers"])
-        m = jax.tree.map(lambda v: v[0], state["opt"])
-        (loss, metrics), grads = jax.value_and_grad(
-            model.loss_fn, has_aux=True)(w, batch, rng)
-        lr = lr_fn(state["step"])
+    Each is ``step(state, batch, rng) -> (state, metrics)``. ``local_step``
+    is the pure per-worker descent (no param-sized collective);
+    ``sync_step`` additionally runs the elastic exchange. The engine
+    dispatches ``sync_step`` on every tau-th step."""
+    if algo not in ("easgd", "asgd"):
+        raise ValueError(f"unknown async algo {algo!r}")
+    if exchanger.kind == "none":
+        raise ValueError("async plans need a real exchanger for the center "
+                         "traffic (got 'none')")
+    # asgd = the alpha=1 point: center applies the full delta sum, workers
+    # re-fetch the center (tau-bounded staleness)
+    a = float(alpha) if algo == "easgd" else 1.0
+    axes = tuple(data_axes)
+    entry = norm_axes(axes)
 
-        # local momentum-SGD step
-        def upd(p, g, mm):
-            mm_new = momentum * mm + g.astype(jnp.float32)
-            return ((p.astype(jnp.float32) - lr * mm_new).astype(p.dtype),
-                    mm_new)
-        out = jax.tree.map(upd, w, grads, m)
-        is_t = lambda t: isinstance(t, tuple)
-        w = jax.tree.map(lambda t: t[0], out, is_leaf=is_t)
-        m = jax.tree.map(lambda t: t[1], out, is_leaf=is_t)
+    def _worker_rng(rng):
+        idx = jax.lax.axis_index(axes[0])
+        for ax in axes[1:]:
+            idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        return jax.random.fold_in(rng, idx)
 
-        # elastic averaging every tau steps
-        do_avg = ((state["step"] + 1) % tau == 0).astype(jnp.float32)
+    def local_update(state, batch, rng):
+        rng = _worker_rng(rng)
+        w = jax.tree.map(lambda v: v[0], state["params"])
+        opt = jax.tree.map(lambda v: v[0], state["opt"])
+        (_, metrics), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(w, batch, rng, unroll=unroll)
+        w, opt = optimizer.update(w, grads, opt, lr_fn(state["step"]))
+        metrics = jax.tree.map(lambda v: jax.lax.pmean(v, entry), metrics)
+        return w, opt, metrics
 
-        def elastic(wi, c):
-            delta = alpha * (wi.astype(jnp.float32) - c.astype(jnp.float32))
-            wi_new = (wi.astype(jnp.float32) - do_avg * delta).astype(wi.dtype)
-            c_new = (c.astype(jnp.float32)
-                     + do_avg * jax.lax.psum(delta, data_axis)).astype(c.dtype)
-            return wi_new, c_new
-        out = jax.tree.map(elastic, w, state["center"])
-        w = jax.tree.map(lambda t: t[0], out, is_leaf=is_t)
-        center = jax.tree.map(lambda t: t[1], out, is_leaf=is_t)
+    def restack(w, opt, center, step):
+        return {"params": jax.tree.map(lambda v: v[None], w),
+                "opt": jax.tree.map(lambda v: v[None], opt),
+                "center": center, "step": step}
 
-        metrics = jax.tree.map(lambda v: jax.lax.pmean(v, data_axis), metrics)
-        new_state = {
-            "workers": jax.tree.map(lambda v: v[None], w),
-            "opt": jax.tree.map(lambda v: v[None], m),
-            "center": center,
-            "step": state["step"] + 1,
-        }
-        return new_state, metrics
+    def per_shard_local(state, batch, rng):
+        w, opt, metrics = local_update(state, batch, rng)
+        return restack(w, opt, state["center"], state["step"] + 1), metrics
 
-    state_spec = {"workers": P(data_axis), "opt": P(data_axis),
+    def per_shard_sync(state, batch, rng):
+        w, opt, metrics = local_update(state, batch, rng)
+        k = 1
+        for ax in axes:
+            k *= jax.lax.axis_size(ax)
+        delta = jax.tree.map(
+            lambda wi, c: wi.astype(jnp.float32) - c.astype(jnp.float32),
+            w, state["center"])
+        # the elastic exchange IS an exchanger round: ASA decomposition,
+        # bucketing and fp16/int8 wire precision apply to the center traffic
+        dmean = exchanger.exchange(delta, entry, sum_fn=sum_fn,
+                                   bucket_bytes=bucket_bytes)
+        c_new = jax.tree.map(
+            lambda c, d: (c.astype(jnp.float32) + a * k * d).astype(c.dtype),
+            state["center"], dmean)
+        if a == 1.0:
+            # exact re-fetch (w - (w - c) would round): workers snap to the
+            # updated center — the asgd/model-averaging point
+            w_new = jax.tree.map(lambda wi, c: c.astype(wi.dtype), w, c_new)
+        else:
+            w_new = jax.tree.map(
+                lambda wi, c: (wi.astype(jnp.float32)
+                               - a * (wi.astype(jnp.float32)
+                                      - c.astype(jnp.float32))
+                               ).astype(wi.dtype), w, c_new)
+        return restack(w_new, opt, c_new, state["step"] + 1), metrics
+
+    state_spec = {"params": P(entry), "opt": P(entry),
                   "center": P(), "step": P()}
-    return jax.shard_map(
-        per_shard, mesh=mesh,
-        in_specs=(state_spec, P(data_axis), P()),
-        out_specs=(state_spec, P()),
-        axis_names=frozenset({data_axis}),
-        check_vma=False)
+
+    def wrap(fn):
+        return jax.shard_map(fn, mesh=mesh,
+                             in_specs=(state_spec, P(axes), P()),
+                             out_specs=(state_spec, P()),
+                             axis_names=frozenset(axes),
+                             check_vma=False)
+
+    return wrap(per_shard_local), wrap(per_shard_sync)

@@ -62,6 +62,13 @@ import numpy as np
 _SMALL_LEAF = 1024
 
 
+def norm_axes(data_axes):
+    """Collapse a data-axes tuple to the form the collectives take: the
+    bare name for a single axis, the tuple itself otherwise."""
+    axes = tuple(data_axes)
+    return axes[0] if len(axes) == 1 else axes
+
+
 def _axis_size(axis) -> int:
     if isinstance(axis, (tuple, list)):
         return int(np.prod([jax.lax.axis_size(a) for a in axis]))

@@ -9,6 +9,10 @@ Every train/serve path asks this module where things live:
   untouched.
 - GSPMD/ZeRO-1 (``core/gspmd.py``): ``fsdp_param_spec`` extends
   ``param_spec`` with the data axis on a free dimension.
+- async plans (``core/easgd.py``): per-worker replica stacks put the
+  leading worker dim over the data axes; the engine
+  (``repro.train.engine``) composes these placements per TrainPlan and
+  ``batch_shardings`` splits gspmd batches.
 - dry-run (``launch/dryrun.py``):   all builders, on 16x16 and 2x16x16.
 - decode (``build_decode``):        ``param_shardings`` + ``cache_shardings``.
 

@@ -3,8 +3,18 @@
     PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
         --smoke --steps 50 --exchanger asa --scheme subgd
 
+    # async (EASGD center with fp16-wire elastic exchange):
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+        --smoke --algo easgd --tau 4 --alpha 0.5 --exchanger asa16
+
+    # resume a checkpointed run:
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+        --smoke --steps 100 --ckpt /tmp/ck --resume /tmp/ck
+
 Runs the reduced (smoke) variant by default on the host CPU devices; the
 full config is exercised through the dry-run (-m repro.launch.dryrun).
+Every algorithm goes through the same engine (``repro.train.engine``), so
+``--ckpt``/``--resume`` work for all of them.
 """
 from __future__ import annotations
 
@@ -18,6 +28,7 @@ from repro.data.synthetic import LMTokenSource, ImageSource
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
 from repro.optim import sgd_momentum, adamw, warmup_cosine, constant
+from repro.train.engine import TrainPlan
 from repro.train.loop import train
 
 
@@ -51,6 +62,10 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--optimizer", default="sgd", choices=["sgd", "adamw"])
+    ap.add_argument("--algo", default="bsp",
+                    choices=["bsp", "easgd", "asgd", "gspmd"],
+                    help="training plan: sync BSP, async EASGD/ASGD, or "
+                         "GSPMD/FSDP")
     ap.add_argument("--exchanger", default="asa")
     ap.add_argument("--scheme", default="subgd", choices=["subgd", "awagd"])
     ap.add_argument("--microbatches", type=int, default=1)
@@ -64,7 +79,18 @@ def main():
                     help="double-buffer the microbatch scan so bucket "
                          "reduce-scatters overlap the next backprop "
                          "(implies --sharded-update)")
+    ap.add_argument("--tau", type=int, default=1,
+                    help="easgd/asgd averaging period (steps between "
+                         "center exchanges)")
+    ap.add_argument("--alpha", type=float, default=None,
+                    help="easgd elastic coefficient (default 0.5; asgd is "
+                         "pinned to 1)")
+    ap.add_argument("--mode", default="zero1", choices=["zero1", "ar"],
+                    help="gspmd gradient reduction mode")
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--resume", default=None, metavar="CKPT",
+                    help="restore state/step/rng offset from a checkpoint "
+                         "written by the same plan and continue")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -74,15 +100,31 @@ def main():
     opt = (sgd_momentum(weight_decay=0.0) if args.optimizer == "sgd"
            else adamw())
     lr_fn = warmup_cosine(args.lr, 10, args.steps)
+    try:
+        plan = TrainPlan(algo=args.algo, exchanger=args.exchanger,
+                         scheme=args.scheme, microbatches=args.microbatches,
+                         bucket_bytes=args.bucket_bytes,
+                         sharded_update=args.sharded_update,
+                         overlap=args.overlap, tau=args.tau,
+                         alpha=args.alpha, mode=args.mode)
+    except ValueError as e:
+        ap.error(str(e))
     batches = synthetic_batches(cfg, args.batch, args.steps, args.seq)
-    _, report = train(model, opt, lr_fn, mesh, batches,
-                      exchanger=args.exchanger, scheme=args.scheme,
-                      num_steps=args.steps, ckpt_path=args.ckpt,
-                      microbatches=args.microbatches,
-                      bucket_bytes=args.bucket_bytes,
-                      sharded_update=args.sharded_update,
-                      overlap=args.overlap)
-    print(f"done: {report.steps} steps, "
+    try:
+        _, report = train(model, opt, lr_fn, mesh, batches, plan=plan,
+                          num_steps=args.steps, ckpt_path=args.ckpt,
+                          resume_from=args.resume)
+    except ValueError as e:
+        if args.resume and "mismatch" in str(e):
+            raise SystemExit(f"--resume {args.resume}: {e}")
+        raise
+    if not report.losses:
+        if args.resume:
+            print(f"done: nothing to do (resumed at step {report.steps})")
+        else:
+            print("done: no steps ran (empty batch source or --steps 0)")
+        return
+    print(f"done: {report.steps} steps ({plan.algo}), "
           f"{report.examples_per_s:.1f} ex/s, "
           f"loss {report.losses[0]:.4f} -> {report.losses[-1]:.4f}")
 

@@ -5,6 +5,13 @@ An ``Optimizer`` is (init, update):
     state = init(params)
     new_params, new_state = update(params, grads, state, lr)
 
+This pair is the update contract for every plan of the training engine
+(``repro.train.engine``): BSP and GSPMD call it on the (replicated or
+FSDP-sharded) state, and the async plans (EASGD/ASGD) call it per worker
+replica — the engine stacks the *full* ``init`` tree along a leading
+worker dim, so any optimizer expressible here (momentum-SGD, AdamW with
+its ``t`` counter, ...) is automatically a valid per-worker update.
+
 The optional **flat hooks** power the ZeRO-1-style RS->update->AG path in
 ``core/bsp.py``, where each data rank owns only the local 1/k shard of the
 optimizer state and updates flat fp32 bucket shards between the exchange

@@ -1,0 +1,228 @@
+"""The unified training engine: one ``TrainPlan`` drives every algorithm.
+
+The paper's headline claim is that synchronous *and* asynchronous training
+live in one framework over a shared exchanger layer. This module is that
+seam: a :class:`TrainPlan` names the algorithm (``bsp`` | ``easgd`` |
+``asgd`` | ``gspmd``) plus its knobs, and :func:`build_engine` resolves it
+to one :class:`Engine` — ``(init_state, step, state_shardings)`` — with a
+single canonical state layout:
+
+    {"params": ..., "opt": ..., "step": int32[]}   (+ algo extras)
+
+- ``bsp``   : params/opt replicated (or per-bucket flat shards with
+              ``sharded_update``); the exchanger moves gradients.
+- ``easgd`` : params/opt are per-worker replica stacks (leading worker
+              dim over the data axes) + the ``center`` extra; the
+              exchanger moves elastic center deltas every ``tau`` steps.
+- ``asgd``  : easgd's alpha=1 point — the center applies the summed
+              worker deltas (tau-bounded staleness), workers re-fetch.
+- ``gspmd`` : params/opt FSDP-sharded; GSPMD lowers the ASA collective
+              schedule from sharding constraints (no explicit exchanger).
+
+``train/loop.py``, ``checkpoint/ckpt.py`` and ``launch/train.py`` consume
+only this interface, so checkpoint save/resume, loss accounting and the
+CLI are algorithm-agnostic. ``Engine.step`` takes the *global* step index
+as a host-side argument: for the async plans the engine dispatches
+between two jitted programs (local-only vs sync) so that non-averaging
+steps compile without any param-sized collective, and resumable runs keep
+tau phase and rng folding aligned with the uninterrupted run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from math import prod
+from typing import Any, Callable
+
+import jax
+
+from repro.core.bsp import (init_sharded_train_state, init_train_state,
+                            make_bsp_step)
+from repro.core.easgd import init_async_state, make_async_step
+from repro.core.exchanger import default_chunk_sum, get_exchanger
+from repro.core.gspmd import fsdp_state_shardings, make_gspmd_step
+from repro.dist.sharding import batch_shardings
+from repro.models.registry import Model
+from repro.optim.optimizers import Optimizer
+
+ALGOS = ("bsp", "easgd", "asgd", "gspmd")
+
+
+@dataclass(frozen=True)
+class TrainPlan:
+    """Declarative selection of a training algorithm + its knobs.
+
+    Validated eagerly so a bad combination fails at plan construction, not
+    at trace time. Knob applicability (see DESIGN.md "Training engine"):
+
+    =============== ======= =========== =======
+    knob            bsp     easgd/asgd  gspmd
+    =============== ======= =========== =======
+    exchanger       grads   center      — (GSPMD lowers the collectives)
+    scheme          yes     —           —
+    microbatches    yes     —           —
+    bucket_bytes    yes     yes         —
+    sharded_update  yes     —           —
+    overlap         yes     —           —
+    tau             —       yes         —
+    alpha           —       easgd only  —
+    mode            —       —           ar | zero1
+    =============== ======= =========== =======
+
+    ``alpha=None`` resolves to the algo default (0.5 for easgd, 1 for
+    asgd — asgd IS the alpha=1 point and rejects any other value).
+    """
+    algo: str = "bsp"
+    exchanger: str = "asa"
+    scheme: str = "subgd"            # bsp: subgd | awagd
+    microbatches: int = 1
+    bucket_bytes: int = 0
+    sharded_update: bool = False
+    overlap: str | None = None       # bsp: None | "buckets"
+    tau: int = 1                     # easgd/asgd averaging period
+    alpha: float | None = None       # easgd elastic coefficient
+    mode: str = "zero1"              # gspmd: ar | zero1
+    data_axes: tuple = ("data",)
+
+    def __post_init__(self):
+        object.__setattr__(self, "data_axes", tuple(self.data_axes))
+        if self.algo not in ALGOS:
+            raise ValueError(f"unknown algo {self.algo!r}; known: {ALGOS}")
+        if self.scheme not in ("subgd", "awagd"):
+            raise ValueError(f"unknown scheme {self.scheme!r}")
+        if self.mode not in ("ar", "zero1"):
+            raise ValueError(f"unknown gspmd mode {self.mode!r}")
+        if self.overlap not in (None, "buckets"):
+            raise ValueError(f"unknown overlap mode {self.overlap!r}")
+        if self.tau < 1:
+            raise ValueError(f"tau must be >= 1 (got {self.tau})")
+        if self.algo != "bsp":
+            bad = [n for n, v in (("sharded_update", self.sharded_update),
+                                  ("overlap", self.overlap),
+                                  ("microbatches", self.microbatches > 1),
+                                  ("scheme", self.scheme != "subgd"))
+                   if v]
+            if bad:
+                raise ValueError(f"{'/'.join(bad)} are BSP-only knobs "
+                                 f"(algo={self.algo!r})")
+        if not self.is_async and self.tau != 1:
+            raise ValueError(f"tau is an easgd/asgd knob "
+                             f"(algo={self.algo!r}); it would be silently "
+                             f"ignored")
+        if self.algo == "gspmd" and self.exchanger != "asa":
+            raise ValueError("gspmd lowers its own collectives from "
+                             "sharding constraints; the exchanger knob "
+                             "does not apply")
+        if self.algo != "gspmd" and self.mode != "zero1":
+            raise ValueError(f"mode is a gspmd knob (algo={self.algo!r})")
+        if self.alpha is not None:
+            if not self.is_async:
+                raise ValueError(f"alpha is an async knob "
+                                 f"(algo={self.algo!r})")
+            if self.algo == "asgd" and self.alpha != 1.0:
+                raise ValueError("asgd is pinned to alpha=1 (the center "
+                                 "applies the full delta sum); use "
+                                 "algo='easgd' for elastic alpha")
+        else:
+            # self-describing plan: resolve the algo default eagerly
+            object.__setattr__(self, "alpha",
+                               1.0 if self.algo == "asgd" else 0.5)
+        if self.is_async and self.exchanger == "none":
+            raise ValueError("async plans need a real exchanger for the "
+                             "center traffic (exchanger='none')")
+
+    @property
+    def is_async(self) -> bool:
+        return self.algo in ("easgd", "asgd")
+
+
+@dataclass(frozen=True)
+class Engine:
+    """A resolved plan: everything the train loop needs, and nothing else.
+
+    ``step(state, batch, rng, step_idx) -> (state, metrics)`` — jitted;
+    ``step_idx`` is the global (resume-aware) step number, used only for
+    host-side dispatch (tau phase). ``init_state(key)`` builds the state on
+    its canonical placement; ``state_shardings(state)`` reads it back (the
+    tree checkpoint restore targets)."""
+    plan: TrainPlan
+    init_state: Callable[[Any], Any]
+    step: Callable[..., Any]
+
+    def state_shardings(self, state):
+        return jax.tree.map(lambda l: getattr(l, "sharding", None), state)
+
+
+def build_engine(plan: TrainPlan, model: Model, optimizer: Optimizer,
+                 lr_fn: Callable, mesh, *, sum_fn=None) -> Engine:
+    """Resolve ``plan`` to ``(init_state, step, state_shardings)``."""
+    sum_fn = sum_fn or default_chunk_sum
+
+    if plan.algo == "bsp":
+        ex = get_exchanger(plan.exchanger)
+        sharded = bool(plan.sharded_update or plan.overlap)
+        jstep = jax.jit(make_bsp_step(
+            model, optimizer, ex, lr_fn, mesh, data_axes=plan.data_axes,
+            scheme=plan.scheme, sum_fn=sum_fn,
+            microbatches=plan.microbatches, bucket_bytes=plan.bucket_bytes,
+            sharded_update=plan.sharded_update, overlap=plan.overlap))
+
+        def step(state, batch, rng, step_idx: int = 0):
+            del step_idx
+            return jstep(state, batch, rng)
+
+        def init_state(key):
+            if sharded:
+                return init_sharded_train_state(
+                    model, optimizer, key, mesh, data_axes=plan.data_axes,
+                    bucket_bytes=plan.bucket_bytes)
+            return init_train_state(model, optimizer, key)
+
+        return Engine(plan, init_state, step)
+
+    if plan.is_async:
+        ex = get_exchanger(plan.exchanger)
+        k = prod(mesh.shape[a] for a in plan.data_axes)
+        local, sync = make_async_step(
+            model, optimizer, ex, lr_fn, mesh, algo=plan.algo,
+            alpha=plan.alpha, data_axes=plan.data_axes, sum_fn=sum_fn,
+            bucket_bytes=plan.bucket_bytes)
+        jlocal, jsync = jax.jit(local), jax.jit(sync)
+
+        def step(state, batch, rng, step_idx: int = 0):
+            # tau is structural: non-averaging steps run a program with no
+            # param-sized collective at all
+            fn = jsync if (int(step_idx) + 1) % plan.tau == 0 else jlocal
+            return fn(state, batch, rng)
+
+        def init_state(key):
+            return init_async_state(model, optimizer, key, k, mesh=mesh,
+                                    data_axes=plan.data_axes)
+
+        return Engine(plan, init_state, step)
+
+    # gspmd
+    abs_state = jax.eval_shape(
+        lambda k: init_train_state(model, optimizer, k), jax.random.key(0))
+    state_sh = fsdp_state_shardings(mesh, abs_state)
+    base = make_gspmd_step(model, optimizer, lr_fn, mesh, mode=plan.mode)
+
+    def constrained(state, batch, rng):
+        new_state, metrics = base(state, batch, rng)
+        # pin the output placement so the FSDP layout is a fixed point of
+        # the step (and checkpoint restore targets a stable sharding)
+        new_state = jax.tree.map(jax.lax.with_sharding_constraint,
+                                 new_state, state_sh)
+        return new_state, metrics
+
+    jstep = jax.jit(constrained)
+
+    def step(state, batch, rng, step_idx: int = 0):
+        del step_idx
+        batch = jax.device_put(batch, batch_shardings(mesh, batch))
+        return jstep(state, batch, rng)
+
+    def init_state(key):
+        return jax.device_put(init_train_state(model, optimizer, key),
+                              state_sh)
+
+    return Engine(plan, init_state, step)

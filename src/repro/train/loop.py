@@ -1,18 +1,36 @@
-"""Training loop: BSP step + parallel loader + metrics + checkpointing."""
+"""Training loop: engine step + parallel loader + metrics + checkpointing.
+
+Algorithm-agnostic: a :class:`~repro.train.engine.TrainPlan` resolves to an
+engine and the loop drives it — bsp, easgd, asgd and gspmd all share this
+loop, its checkpoint save/resume, and its loss accounting. The legacy
+keyword surface (``exchanger=``, ``scheme=``, ...) still works and simply
+builds a bsp plan.
+
+Resume contract: the rng is folded with the *global* step index and the
+loop consumes (and discards) the first ``start_step`` batches of the
+iterable, so a run restored from a mid-run checkpoint replays exactly the
+uninterrupted run (bitwise — tested per algo in ``tests/test_engine.py``).
+Callers therefore pass a batch iterable that restarts from step 0. The
+skip pays the loader's cost for the discarded batches — cheap for the
+synthetic/index-keyed sources here, where producing batch i is O(1); a
+loader with expensive staging should defer device transfer until a batch
+is actually consumed so the skip stays metadata-only.
+"""
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
 
 import jax
-import jax.numpy as jnp
 
-from repro.checkpoint.ckpt import save_checkpoint
-from repro.core.bsp import (init_sharded_train_state, init_train_state,
-                            make_bsp_step)
-from repro.core.exchanger import get_exchanger
+from repro.checkpoint.ckpt import restore_for_resume, save_checkpoint
 from repro.models.registry import Model
 from repro.optim.optimizers import Optimizer
+from repro.train.engine import TrainPlan, build_engine
+
+# when logging is off, losses still move to host in bounded windows (a long
+# run must not accumulate one device scalar per step)
+_FLUSH_CAP = 100
 
 
 @dataclass
@@ -24,61 +42,83 @@ class TrainReport:
 
 
 def train(model: Model, optimizer: Optimizer, lr_fn, mesh, batches, *,
+          plan: TrainPlan | None = None, algo: str = "bsp",
           exchanger: str = "asa", scheme: str = "subgd",
           data_axes=("data",), num_steps: int = 100, seed: int = 0,
           log_every: int = 10, ckpt_path: str | None = None,
-          ckpt_every: int = 0, state=None, sum_fn=None,
-          microbatches: int = 1, bucket_bytes: int = 0,
-          sharded_update: bool = False, overlap: str | None = None,
+          ckpt_every: int = 0, resume_from: str | None = None,
+          state=None, sum_fn=None, microbatches: int = 1,
+          bucket_bytes: int = 0, sharded_update: bool = False,
+          overlap: str | None = None, tau: int = 1,
+          alpha: float | None = None, mode: str = "zero1",
           print_fn=print) -> tuple[dict, TrainReport]:
     """``batches``: iterable of device-ready batches (e.g. ParallelLoader).
 
-    ``sharded_update``/``overlap``/``bucket_bytes`` select the
-    RS->update->AG pipeline (see ``core/bsp.py``); the sharded optimizer
-    state is initialized here when no ``state`` is passed."""
-    from repro.core.exchanger import default_chunk_sum
-    ex = get_exchanger(exchanger)
-    sharded = bool(sharded_update or overlap)
-    step_fn = jax.jit(make_bsp_step(
-        model, optimizer, ex, lr_fn, mesh, data_axes=data_axes,
-        scheme=scheme, sum_fn=sum_fn or default_chunk_sum,
-        microbatches=microbatches, bucket_bytes=bucket_bytes,
-        sharded_update=sharded_update, overlap=overlap))
+    Pass ``plan`` to pick the algorithm explicitly; the remaining algo
+    keywords (``exchanger``/``scheme``/``tau``/``alpha``/``mode``/...) are
+    the flat legacy surface and are folded into a plan when ``plan`` is
+    None. ``resume_from`` restores a checkpoint written by the same plan
+    (state + step + rng fold offset) and continues to ``num_steps``."""
+    if plan is None:
+        plan = TrainPlan(algo=algo, exchanger=exchanger, scheme=scheme,
+                         data_axes=tuple(data_axes),
+                         microbatches=microbatches,
+                         bucket_bytes=bucket_bytes,
+                         sharded_update=sharded_update, overlap=overlap,
+                         tau=tau, alpha=alpha, mode=mode)
+    engine = build_engine(plan, model, optimizer, lr_fn, mesh,
+                          sum_fn=sum_fn)
     if state is None:
-        if sharded:
-            state = init_sharded_train_state(
-                model, optimizer, jax.random.key(seed), mesh,
-                data_axes=data_axes, bucket_bytes=bucket_bytes)
-        else:
-            state = init_train_state(model, optimizer, jax.random.key(seed))
+        state = engine.init_state(jax.random.key(seed))
+    start_step = 0
+    if resume_from:
+        # restore onto the engine-initialized state: structure, dtypes AND
+        # placement (sharded opt-state shards land back on their ranks)
+        state, start_step = restore_for_resume(resume_from, state,
+                                               expect_algo=plan.algo)
     rng = jax.random.key(seed + 1)
 
     report = TrainReport()
+    report.steps = start_step
     n_examples = 0
     t0 = time.perf_counter()
     it = iter(batches)
-    # losses stay on device between log boundaries: a per-step float()
-    # would block dispatch every step (the deferred trace is materialized
-    # once at the end)
+    try:
+        for _ in range(start_step):   # batches the checkpointed run saw
+            next(it)
+    except StopIteration:
+        return state, report
+    # losses stay on device between flush boundaries: a per-step float()
+    # would block dispatch every step. Flushed every log_every steps (or
+    # _FLUSH_CAP when logging is off) so the buffer stays bounded.
+    flush_every = min(log_every, _FLUSH_CAP) if log_every else _FLUSH_CAP
     device_losses = []
-    for i in range(num_steps):
+    saved_at = None
+    for i in range(start_step, num_steps):
         try:
             batch = next(it)
         except StopIteration:
             break
-        state, metrics = step_fn(state, batch, jax.random.fold_in(rng, i))
+        state, metrics = engine.step(state, batch,
+                                     jax.random.fold_in(rng, i), step_idx=i)
         device_losses.append(metrics["loss"])
         first = jax.tree.leaves(batch)[0]
         n_examples += int(first.shape[0])
         if log_every and (i % log_every == 0 or i == num_steps - 1):
             print_fn(f"step {i:5d}  loss {float(device_losses[-1]):.4f}")
+        if len(device_losses) >= flush_every:
+            report.losses.extend(float(l) for l in device_losses)
+            device_losses.clear()
         if ckpt_path and ckpt_every and (i + 1) % ckpt_every == 0:
-            save_checkpoint(ckpt_path, state, step=i + 1)
+            save_checkpoint(ckpt_path, state, step=i + 1, algo=plan.algo)
+            saved_at = i + 1
         report.steps = i + 1
     jax.block_until_ready(state)
     report.wall_time = time.perf_counter() - t0
-    report.losses = [float(l) for l in device_losses]
+    report.losses.extend(float(l) for l in device_losses)
     report.examples_per_s = n_examples / max(report.wall_time, 1e-9)
-    if ckpt_path:
-        save_checkpoint(ckpt_path, state, step=report.steps)
+    if ckpt_path and report.steps != saved_at:
+        # the in-loop save already covered the final step when ckpt_every
+        # divides it — don't write the same step twice
+        save_checkpoint(ckpt_path, state, step=report.steps, algo=plan.algo)
     return state, report

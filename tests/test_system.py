@@ -6,12 +6,12 @@ import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
-from repro.core import (get_exchanger, init_easgd_state, init_train_state,
-                        make_bsp_step, make_easgd_step)
+from repro.core import get_exchanger, init_train_state, make_bsp_step
 from repro.core.gspmd import make_gspmd_step
 from repro.data.synthetic import LMTokenSource
 from repro.models import build_model
 from repro.optim import constant, sgd_momentum
+from repro.train.engine import TrainPlan
 from repro.train.loop import train
 from repro.train.serve import generate
 
@@ -56,14 +56,12 @@ def test_easgd_trains_center():
     mesh = jax.make_mesh((1,), ("data",))
     jax.set_mesh(mesh)
     opt = sgd_momentum(weight_decay=0.0)
-    state = init_easgd_state(model, opt, jax.random.key(0), 1)
-    step = jax.jit(make_easgd_step(model, constant(0.02), mesh,
-                                   alpha=0.5, tau=2))
-    losses = []
-    for i, b in enumerate(_batches(cfg, 30)):
-        state, m = step(state, b, jax.random.key(i))
-        losses.append(float(m["loss"]))
-    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+    state, report = train(model, opt, constant(0.02), mesh,
+                          _batches(cfg, 30),
+                          plan=TrainPlan(algo="easgd", alpha=0.5, tau=2),
+                          num_steps=30, log_every=0,
+                          print_fn=lambda *_: None)
+    assert np.mean(report.losses[-5:]) < np.mean(report.losses[:5])
     # center was pulled toward workers
     c = jax.tree.leaves(state["center"])[0]
     assert bool(jnp.isfinite(c).all())
