@@ -1,0 +1,126 @@
+"""Attention hot-path bench: Pallas flash kernels vs the XLA einsum dense
+path vs the blockwise scan, at S in {512, 2048, 8192} (quick: {512, 2048}),
+fwd and fwd+bwd.
+
+Per row: wall time -> tok/s, compiled peak workspace bytes
+(``memory_analysis().temp_size_in_bytes`` — the dense path's (S,S) score
+buffers live here), the modeled windowed-attention roofline
+(``roofline.analysis.attention_flops_bytes``: FLOPs, minimal HBM bytes,
+achieved-vs-peak fraction), and for the flash path the no-(S,S)-in-HLO
+guard. On CPU the flash kernels run through the Pallas interpreter
+(correctness-path timing, as in bench_kernels); compiled speed needs TPU.
+The roofline + peak-memory columns are backend-independent evidence.
+"""
+import re
+import time
+
+
+def _bench(fn, args, S, reps=2):
+    """One AOT compile per row: the compiled executable is what gets
+    timed AND inspected (peak workspace + (S,S)-shape scan), so the
+    measured computation and the evidence are the same HLO."""
+    import jax
+    c = jax.jit(fn).lower(*args).compile()
+    out = c(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = c(*args)
+    jax.block_until_ready(out)
+    us = (time.perf_counter() - t0) / reps * 1e6
+    ma = c.memory_analysis()
+    temp = int(getattr(ma, "temp_size_in_bytes", 0))
+    sxs = len(re.findall(rf"\[(?:\d+,)*{S},{S}\]", c.as_text()))
+    return us, temp, sxs
+
+
+def run(quick=False):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import AttentionConfig
+    from repro.kernels.flash_attention import flash_attention
+    from repro.models.attention import (causal_window_mask, gqa_attend,
+                                        gqa_attend_blockwise)
+    from repro.roofline.analysis import PEAK_FLOPS, attention_flops_bytes
+
+    B, H, KV, hd = 1, 4, 2, 64
+    a = AttentionConfig(num_heads=H, num_kv_heads=KV, head_dim=hd)
+    seqs = [512, 2048] if quick else [512, 2048, 8192]
+    rows = []
+    for S in seqs:
+        key = jax.random.key(S)
+        q = jax.random.normal(key, (B, S, H, hd), jnp.bfloat16)
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, hd),
+                              jnp.bfloat16)
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, hd),
+                              jnp.bfloat16)
+        pos = jnp.arange(S)
+        keep = causal_window_mask(pos, pos, 0)
+        bq = bk = min(512, max(128, S // 16))
+
+        def dense(q, k, v):
+            return gqa_attend(q, k, v, keep, a)
+
+        def blockwise(q, k, v):
+            return gqa_attend_blockwise(q, k, v, pos, pos, 0, a, block=512)
+
+        def flash(q, k, v, window=0):
+            return flash_attention(q, k, v, window=window, block_q=bq,
+                                   block_k=bk)
+
+        impls = [("dense", dense), ("blockwise", blockwise),
+                 ("flash", flash)]
+
+        def bwd_of(f):
+            # grad wrt all of (q, k, v): dropping k/v would let XLA DCE
+            # the dkv backward (kernel or einsum) out of the measurement
+            def step(q, k, v):
+                return jax.grad(
+                    lambda q, k, v: f(q, k, v).astype(jnp.float32).sum(),
+                    argnums=(0, 1, 2))(q, k, v)
+            return step
+
+        times = {}
+        for kind in ("fwd", "fwd+bwd"):
+            # quick mode trims the expensive half of the matrix: the big-S
+            # backward columns (full mode runs everything)
+            if quick and S >= 2048 and kind == "fwd+bwd":
+                rows.append((f"attention/skipped_S{S}_{kind}", 0,
+                             "quick=1;run_full_bench_for_this_row"))
+                continue
+            rf = attention_flops_bytes(
+                batch=B, q_len=S, kv_len=S, heads=H, kv_heads=KV,
+                head_dim_k=hd, kind=kind)
+            for name, f in impls:
+                us, temp, sxs = _bench(
+                    f if kind == "fwd" else bwd_of(f), (q, k, v), S,
+                    reps=1 if S >= 2048 else 2)
+                times[(name, kind)] = us
+                frac = rf["flops"] / (us * 1e-6) / PEAK_FLOPS
+                rows.append((
+                    f"attention/{name}_S{S}_{kind}", us,
+                    f"tok_s={B * S / (us * 1e-6):.0f};"
+                    f"peak_ws_mb={temp / 2 ** 20:.1f};"
+                    f"model_gflop={rf['flops'] / 1e9:.2f};"
+                    f"ai={rf['intensity']:.0f};"
+                    f"roofline_frac={frac:.3g};sxs_shapes={sxs}"))
+            d, fl = times[("dense", kind)], times[("flash", kind)]
+            rows.append((f"attention/flash_over_dense_S{S}_{kind}", fl,
+                         f"ratio={fl / d:.2f};dense_us={d:.0f}"))
+        # windowed attention: the roofline goes linear in S and the kernel
+        # skips out-of-window tiles
+        rfw = attention_flops_bytes(batch=B, q_len=S, kv_len=S, heads=H,
+                                    kv_heads=KV, head_dim_k=hd, window=256)
+        us, _, _ = _bench(lambda q, k, v: flash(q, k, v, window=256),
+                          (q, k, v), S, reps=1 if S >= 2048 else 2)
+        rows.append((f"attention/flash_w256_S{S}_fwd", us,
+                     f"tok_s={B * S / (us * 1e-6):.0f};"
+                     f"model_gflop={rfw['flops'] / 1e9:.2f};"
+                     f"pairs_frac={rfw['pairs'] / (S * (S + 1) // 2):.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run(quick=True):
+        print(f"{name},{us:.1f},{derived}")

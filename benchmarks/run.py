@@ -14,13 +14,16 @@ Prints ``name,us_per_call,derived`` CSV:
 - bench_serve    -> continuous-batching engine vs static-batch serving
                     (steady-state tok/s, p50/p99 token latency, recompile
                     guard)
+- bench_attention-> flash (Pallas) vs XLA-einsum vs blockwise attention at
+                    S in {512, 2048, 8192}: fwd / fwd+bwd tok/s, peak
+                    workspace, achieved-vs-roofline, no-(S,S)-in-HLO guard
 
 ``--quick`` runs the CI smoke subset (bench_comm + bench_overlap +
-bench_easgd + bench_serve at reduced scale); ``--json PATH`` additionally
-writes the
+bench_easgd + bench_serve + bench_attention at reduced scale); ``--json
+PATH`` additionally writes the
 rows as JSON so the perf trajectory accumulates as artifacts
 (``BENCH_*.json`` — async throughput rows land alongside comm/overlap/
-serve).
+serve/attention).
 """
 import argparse
 import inspect
@@ -44,23 +47,26 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke subset: bench_comm + bench_overlap + "
-                         "bench_easgd + bench_serve at reduced scale")
+                         "bench_easgd + bench_serve + bench_attention at "
+                         "reduced scale")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as JSON (perf-trajectory "
                          "artifact)")
     args = ap.parse_args()
 
-    from benchmarks import (bench_comm, bench_dist, bench_easgd,
-                            bench_kernels, bench_loading, bench_overlap,
-                            bench_scaling, bench_serve)
+    from benchmarks import (bench_attention, bench_comm, bench_dist,
+                            bench_easgd, bench_kernels, bench_loading,
+                            bench_overlap, bench_scaling, bench_serve)
     if args.quick:
         modules = [("comm", bench_comm), ("overlap", bench_overlap),
-                   ("easgd", bench_easgd), ("serve", bench_serve)]
+                   ("easgd", bench_easgd), ("serve", bench_serve),
+                   ("attention", bench_attention)]
     else:
         modules = [("comm", bench_comm), ("overlap", bench_overlap),
                    ("scaling", bench_scaling), ("easgd", bench_easgd),
                    ("loading", bench_loading), ("kernels", bench_kernels),
-                   ("dist", bench_dist), ("serve", bench_serve)]
+                   ("dist", bench_dist), ("serve", bench_serve),
+                   ("attention", bench_attention)]
     print("name,us_per_call,derived")
     failed, rows = [], []
     for name, mod in modules:

@@ -55,6 +55,11 @@ class AttentionConfig:
     # unroll the KV-block scan (dry-run costing: scan bodies are counted
     # once by XLA, so unrolling keeps the roofline honest)
     block_unroll: bool = False
+    # attention implementation: "" / "auto" (flash where Pallas compiles,
+    # einsum ref elsewhere) | "flash" (Pallas tiled kernels) | "ref"
+    # (einsum oracles) | "blockwise" (lax.scan online softmax). The
+    # REPRO_ATTN_IMPL env var overrides; see models/attention.py.
+    attn_impl: str = ""
 
 
 @dataclass(frozen=True)
@@ -204,6 +209,16 @@ class ArchConfig:
 
     def with_overrides(self, **kw: Any) -> "ArchConfig":
         return replace(self, **kw)
+
+
+def with_attn_impl(cfg: ArchConfig, impl: str | None) -> ArchConfig:
+    """Pin the attention implementation on a config (the ``--attn-impl``
+    CLI knob and ``Engine(attn_impl=...)`` both route through here).
+    No-op when ``impl`` is falsy or the arch has no attention block
+    (pure-SSM families), so a global flag can sweep every arch."""
+    if not impl or cfg.attention is None:
+        return cfg
+    return replace(cfg, attention=replace(cfg.attention, attn_impl=impl))
 
 
 def reduced(cfg: ArchConfig) -> ArchConfig:

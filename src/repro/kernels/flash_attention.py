@@ -1,0 +1,477 @@
+"""Pallas flash-attention kernel family: the one attention hot path.
+
+Tiled attention in the FlashAttention style (PAPERS.md: "FlashAttention:
+Fast and Memory-Efficient Exact Attention with IO-Awareness") for every
+attention site in the repo — train forward/backward, chunked prefill, and
+(B,1) decode — so no path ever materializes an (S, S) score matrix in HBM.
+
+Contracts shared by the whole family:
+
+- **GQA grouping inside the kernel.** q is (B, Sq, H, Dk) and k/v are
+  (B, Sk, KV, Dk/Dv) with G = H // KV query heads per kv head; the grid
+  iterates (batch, kv_head, ...) and each q tile carries its group's G
+  heads as extra rows of the score matmul ((block_q*G, block_k) on the
+  MXU), so k/v are never repeated across query heads in HBM. KV=1 with
+  Dk != Dv is the MLA absorbed-matmul layout (q/k in the latent+rope
+  space, v = the latent itself).
+- **fp32 online softmax, bf16/fp16 I/O.** Scores, the running (m, l)
+  statistics and the output accumulator live in fp32 VMEM scratch;
+  q/k/v/out move through HBM in the model's compute dtype.
+- **Residuals are (out, lse).** The forward saves only the output and the
+  per-row log-sum-exp (B, Sq, H) — the backward recomputes p tile-wise
+  from (q, k, lse), never storing probabilities. This is the
+  residual/VJP convention later fused kernels follow.
+- **Masking = causal + sliding window + ragged tails.** Causality is
+  evaluated against absolute positions ``q_off[b] + row`` (q_off=0 for
+  train, the chunk start for prefill, the per-slot position vector for
+  decode), so one kernel serves all three paths; ``window`` may be a
+  traced scalar (per-layer windows inside layer scans). Key tiles
+  entirely above the causal diagonal are skipped. Rows/keys padded up to
+  the tile size are masked out (keys) or sliced off (rows).
+
+Execution mode follows the package policy (compiled on TPU, interpreter
+elsewhere, ``REPRO_PALLAS_INTERPRET`` override); parity against the
+einsum oracles is pinned in ``tests/test_flash_attention.py``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import resolve_interpret
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+DEFAULT_DECODE_BLOCK_K = 512
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def _scratch(shape):
+    return pltpu.VMEM(shape, jnp.float32)
+
+
+def _dot(a, b, trans_b: bool = False):
+    dims = (((1,), (1,)), ((), ())) if trans_b else (((1,), (0,)), ((), ()))
+    return jax.lax.dot_general(a, b, dims,
+                               preferred_element_type=jnp.float32)
+
+
+def _mask(keep_shape, i, j, q_off, window, kv_len, block_q, block_k,
+          groups):
+    """(rows, block_k) keep mask. Row r holds (q index r//G, group r%G)."""
+    r = jax.lax.broadcasted_iota(jnp.int32, keep_shape, 0)
+    c = jax.lax.broadcasted_iota(jnp.int32, keep_shape, 1)
+    qpos = q_off + i * block_q + r // groups
+    kpos = j * block_k + c
+    keep = (kpos <= qpos) & (kpos < kv_len)
+    dist = qpos - kpos
+    return keep & ((window <= 0) | (dist < window))
+
+
+def _tile_live(i, j, q_off, window, block_q, block_k):
+    """Whether key tile j can contribute to q tile i: not entirely above
+    the causal diagonal, and (for sliding windows) not entirely older than
+    the window of the tile's oldest query. Exact — a skipped tile's mask
+    is all-False, so every pruned contribution was a 0. Makes windowed
+    attention's grid work linear in S instead of quadratic."""
+    causal = j * block_k <= q_off + (i + 1) * block_q - 1
+    in_window = (window <= 0) | (
+        (j + 1) * block_k > q_off + i * block_q - window + 1)
+    return causal & in_window
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(qoff_ref, win_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
+                m_scr, l_scr, acc_scr, *, sm_scale, kv_len, block_q,
+                block_k, groups):
+    i, j = pl.program_id(2), pl.program_id(3)
+    nk = pl.num_programs(3)
+    rows = block_q * groups
+    q_off = qoff_ref[0, 0]
+    win = win_ref[0, 0]
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(_tile_live(i, j, q_off, win, block_q, block_k))
+    def _compute():
+        q = q_ref[...].reshape(rows, q_ref.shape[-1])
+        k = k_ref[...].reshape(block_k, k_ref.shape[-1])
+        s = _dot(q, k, trans_b=True) * sm_scale          # (rows, bk) fp32
+        keep = _mask(s.shape, i, j, q_off, win, kv_len, block_q, block_k,
+                     groups)
+        s = jnp.where(keep, s, NEG_INF)
+        m_prev = m_scr[...][:, :1]
+        l_prev = l_scr[...][:, :1]
+        m_next = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        # explicit zeroing: when every key so far is masked m_next is still
+        # NEG_INF and exp(s - m_next) would be 1, not 0
+        p = jnp.where(keep, jnp.exp(s - m_next), 0.0)
+        alpha = jnp.exp(m_prev - m_next)
+        l_next = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        m_scr[...] = jnp.broadcast_to(m_next, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_next, l_scr.shape)
+        v = v_ref[...].reshape(block_k, v_ref.shape[-1])
+        acc_scr[...] = acc_scr[...] * alpha + _dot(p.astype(v.dtype), v)
+
+    @pl.when(j == nk - 1)
+    def _store():
+        l = l_scr[...][:, :1]
+        m = m_scr[...][:, :1]
+        out = acc_scr[...] / jnp.maximum(l, 1e-30)
+        o_ref[...] = out.reshape(o_ref.shape).astype(o_ref.dtype)
+        lse = m[:, 0] + jnp.log(jnp.maximum(l[:, 0], 1e-30))
+        lse_ref[...] = lse.reshape(lse_ref.shape)
+
+
+def _fwd_call(q, k, v, q_off, window, sm_scale, kv_len, block_q, block_k,
+              interpret):
+    B, Sq, H, Dk = q.shape
+    _, Sk, KV, _ = k.shape
+    Dv = v.shape[-1]
+    G = H // KV
+    grid = (B, KV, Sq // block_q, Sk // block_k)
+    rows = block_q * G
+    q_spec = pl.BlockSpec((1, block_q, G, Dk), lambda b, h, i, j: (b, i, h, 0))
+    kv = lambda d: pl.BlockSpec((1, block_k, 1, d),
+                                lambda b, h, i, j: (b, j, h, 0))
+    scalar = lambda im: pl.BlockSpec((1, 1), im)
+    out, lse = pl.pallas_call(
+        functools.partial(_fwd_kernel, sm_scale=sm_scale, kv_len=kv_len,
+                          block_q=block_q, block_k=block_k, groups=G),
+        grid=grid,
+        in_specs=[scalar(lambda b, h, i, j: (b, 0)),
+                  scalar(lambda b, h, i, j: (0, 0)),
+                  q_spec, kv(Dk), kv(Dv)],
+        out_specs=[pl.BlockSpec((1, block_q, G, Dv),
+                                lambda b, h, i, j: (b, i, h, 0)),
+                   pl.BlockSpec((1, block_q, G),
+                                lambda b, h, i, j: (b, i, h))],
+        out_shape=[jax.ShapeDtypeStruct((B, Sq, H, Dv), q.dtype),
+                   jax.ShapeDtypeStruct((B, Sq, H), jnp.float32)],
+        scratch_shapes=[_scratch((rows, 128)), _scratch((rows, 128)),
+                        _scratch((rows, Dv))],
+        interpret=interpret,
+    )(q_off, window, q, k, v)
+    return out, lse
+
+
+# ---------------------------------------------------------------------------
+# backward (dq and dkv kernels; p recomputed tile-wise from lse)
+# ---------------------------------------------------------------------------
+
+def _dq_kernel(qoff_ref, win_ref, q_ref, k_ref, v_ref, do_ref, lse_ref,
+               di_ref, dq_ref, dq_scr, *, sm_scale, kv_len, block_q,
+               block_k, groups):
+    i, j = pl.program_id(2), pl.program_id(3)
+    nk = pl.num_programs(3)
+    rows = block_q * groups
+    q_off = qoff_ref[0, 0]
+    win = win_ref[0, 0]
+
+    @pl.when(j == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    @pl.when(_tile_live(i, j, q_off, win, block_q, block_k))
+    def _compute():
+        q = q_ref[...].reshape(rows, q_ref.shape[-1])
+        k = k_ref[...].reshape(block_k, k_ref.shape[-1])
+        v = v_ref[...].reshape(block_k, v_ref.shape[-1])
+        do = do_ref[...].reshape(rows, do_ref.shape[-1])
+        lse = lse_ref[...].reshape(rows, 1)
+        di = di_ref[...].reshape(rows, 1)
+        s = _dot(q, k, trans_b=True) * sm_scale
+        keep = _mask(s.shape, i, j, q_off, win, kv_len, block_q, block_k,
+                     groups)
+        s = jnp.where(keep, s, NEG_INF)
+        p = jnp.exp(s - lse)                         # masked -> exp(-inf)=0
+        dp = _dot(do, v, trans_b=True)               # (rows, bk)
+        ds = p * (dp - di) * sm_scale
+        dq_scr[...] = dq_scr[...] + _dot(ds.astype(k.dtype), k)
+
+    @pl.when(j == nk - 1)
+    def _store():
+        dq_ref[...] = dq_scr[...].reshape(dq_ref.shape).astype(dq_ref.dtype)
+
+
+def _dkv_kernel(qoff_ref, win_ref, q_ref, k_ref, v_ref, do_ref, lse_ref,
+                di_ref, dk_ref, dv_ref, dk_scr, dv_scr, *, sm_scale,
+                kv_len, block_q, block_k, groups):
+    j, i = pl.program_id(2), pl.program_id(3)      # kv tile j, q tile i
+    nq = pl.num_programs(3)
+    rows = block_q * groups
+    q_off = qoff_ref[0, 0]
+    win = win_ref[0, 0]
+
+    @pl.when(i == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    @pl.when(_tile_live(i, j, q_off, win, block_q, block_k))
+    def _compute():
+        q = q_ref[...].reshape(rows, q_ref.shape[-1])
+        k = k_ref[...].reshape(block_k, k_ref.shape[-1])
+        v = v_ref[...].reshape(block_k, v_ref.shape[-1])
+        do = do_ref[...].reshape(rows, do_ref.shape[-1])
+        lse = lse_ref[...].reshape(rows, 1)
+        di = di_ref[...].reshape(rows, 1)
+        s = _dot(q, k, trans_b=True) * sm_scale
+        keep = _mask(s.shape, i, j, q_off, win, kv_len, block_q, block_k,
+                     groups)
+        s = jnp.where(keep, s, NEG_INF)
+        p = jnp.exp(s - lse)
+        # contract over the rows axis: the G grouped query heads fold into
+        # the same dk/dv tile, which is exactly the GQA gradient
+        dv_scr[...] = dv_scr[...] + jax.lax.dot_general(
+            p.astype(do.dtype), do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dp = _dot(do, v, trans_b=True)
+        ds = (p * (dp - di) * sm_scale).astype(q.dtype)
+        dk_scr[...] = dk_scr[...] + jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(i == nq - 1)
+    def _store():
+        dk_ref[...] = dk_scr[...].reshape(dk_ref.shape).astype(dk_ref.dtype)
+        dv_ref[...] = dv_scr[...].reshape(dv_ref.shape).astype(dv_ref.dtype)
+
+
+def _bwd_call(q, k, v, q_off, window, out, lse, do, sm_scale, kv_len,
+              block_q, block_k, interpret):
+    B, Sq, H, Dk = q.shape
+    _, Sk, KV, _ = k.shape
+    Dv = v.shape[-1]
+    G = H // KV
+    rows = block_q * G
+    di = jnp.sum(out.astype(jnp.float32) * do.astype(jnp.float32),
+                 axis=-1)                                   # (B, Sq, H)
+    scalar = lambda im: pl.BlockSpec((1, 1), im)
+    kv_spec = lambda d, im: pl.BlockSpec((1, block_k, 1, d), im)
+    row_spec = lambda d, im: pl.BlockSpec((1, block_q, G, d), im)
+    vec_spec = lambda im: pl.BlockSpec((1, block_q, G), im)
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, sm_scale=sm_scale, kv_len=kv_len,
+                          block_q=block_q, block_k=block_k, groups=G),
+        grid=(B, KV, Sq // block_q, Sk // block_k),
+        in_specs=[scalar(lambda b, h, i, j: (b, 0)),
+                  scalar(lambda b, h, i, j: (0, 0)),
+                  row_spec(Dk, lambda b, h, i, j: (b, i, h, 0)),
+                  kv_spec(Dk, lambda b, h, i, j: (b, j, h, 0)),
+                  kv_spec(Dv, lambda b, h, i, j: (b, j, h, 0)),
+                  row_spec(Dv, lambda b, h, i, j: (b, i, h, 0)),
+                  vec_spec(lambda b, h, i, j: (b, i, h)),
+                  vec_spec(lambda b, h, i, j: (b, i, h))],
+        out_specs=row_spec(Dk, lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[_scratch((rows, Dk))],
+        interpret=interpret,
+    )(q_off, window, q, k, v, do, lse, di)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, sm_scale=sm_scale, kv_len=kv_len,
+                          block_q=block_q, block_k=block_k, groups=G),
+        grid=(B, KV, Sk // block_k, Sq // block_q),
+        in_specs=[scalar(lambda b, h, j, i: (b, 0)),
+                  scalar(lambda b, h, j, i: (0, 0)),
+                  row_spec(Dk, lambda b, h, j, i: (b, i, h, 0)),
+                  kv_spec(Dk, lambda b, h, j, i: (b, j, h, 0)),
+                  kv_spec(Dv, lambda b, h, j, i: (b, j, h, 0)),
+                  row_spec(Dv, lambda b, h, j, i: (b, i, h, 0)),
+                  vec_spec(lambda b, h, j, i: (b, i, h)),
+                  vec_spec(lambda b, h, j, i: (b, i, h))],
+        out_specs=[kv_spec(Dk, lambda b, h, j, i: (b, j, h, 0)),
+                   kv_spec(Dv, lambda b, h, j, i: (b, j, h, 0))],
+        out_shape=[jax.ShapeDtypeStruct(k.shape, k.dtype),
+                   jax.ShapeDtypeStruct(v.shape, v.dtype)],
+        scratch_shapes=[_scratch((block_k, Dk)), _scratch((block_k, Dv))],
+        interpret=interpret,
+    )(q_off, window, q, k, v, do, lse, di)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# custom VJP over the padded core
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
+def _flash(q, k, v, q_off, window, sm_scale, kv_len, block_q, block_k,
+           interpret):
+    return _fwd_call(q, k, v, q_off, window, sm_scale, kv_len, block_q,
+                     block_k, interpret)
+
+
+def _flash_fwd(q, k, v, q_off, window, sm_scale, kv_len, block_q, block_k,
+               interpret):
+    out, lse = _fwd_call(q, k, v, q_off, window, sm_scale, kv_len, block_q,
+                         block_k, interpret)
+    return (out, lse), (q, k, v, q_off, window, out, lse)
+
+
+def _flash_bwd(sm_scale, kv_len, block_q, block_k, interpret, res, cts):
+    q, k, v, q_off, window, out, lse = res
+    do, _ = cts          # the lse output is a residual, not a model output
+    dq, dk, dv = _bwd_call(q, k, v, q_off, window, out, lse, do, sm_scale,
+                           kv_len, block_q, block_k, interpret)
+    zero = lambda x: np.zeros(x.shape, dtype=jax.dtypes.float0)
+    return dq, dk, dv, zero(q_off), zero(window)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, q_off=None, window=0, sm_scale=None,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool | None = None, return_lse: bool = False):
+    """Fused tiled attention. q: (B, Sq, H, Dk); k: (B, Sk, KV, Dk);
+    v: (B, Sk, KV, Dv) with H % KV == 0. Returns (B, Sq, H, Dv) [+ lse
+    (B, Sq, H) fp32 when ``return_lse``; do not differentiate through lse].
+
+    ``q_off``: absolute position of q row 0 — None/scalar/(B,) vector
+    (train / chunked prefill / per-slot decode). ``window``: sliding
+    window (<=0 = plain causal), python int or traced scalar. ``sm_scale``
+    defaults to 1/sqrt(Dk). Ragged Sq/Sk are padded to the tile size
+    internally; padded keys are masked, padded rows sliced off."""
+    B, Sq, H, Dk = q.shape
+    _, Sk, KV, _ = k.shape
+    if H % KV:
+        raise ValueError(f"H={H} not divisible by KV={KV}")
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(Dk)
+    interpret = resolve_interpret(interpret)
+    block_q = min(block_q, _round_up(Sq, 16))
+    block_k = min(block_k, _round_up(Sk, 16))
+    pq, pk = _round_up(Sq, block_q) - Sq, _round_up(Sk, block_k) - Sk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    if q_off is None:
+        q_off = jnp.zeros((B, 1), jnp.int32)
+    else:
+        q_off = jnp.broadcast_to(
+            jnp.asarray(q_off, jnp.int32).reshape(-1, 1), (B, 1))
+    window = jnp.asarray(window, jnp.int32).reshape(1, 1)
+    out, lse = _flash(q, k, v, q_off, window, float(sm_scale), Sk,
+                      block_q, block_k, interpret)
+    out = out[:, :Sq]
+    if not return_lse:
+        return out
+    # lse is a residual, not a differentiable output — the VJP discards
+    # its cotangent, so enforce the contract rather than return silent
+    # zero gradients to anyone who puts lse in a loss
+    return out, jax.lax.stop_gradient(lse[:, :Sq])
+
+
+# ---------------------------------------------------------------------------
+# split-KV decode
+# ---------------------------------------------------------------------------
+
+def _decode_kernel(pos_ref, win_ref, q_ref, k_ref, v_ref, m_ref, l_ref,
+                   acc_ref, *, sm_scale, kv_len, block_k, groups):
+    j = pl.program_id(2)
+    pos = pos_ref[0, 0]
+    win = win_ref[0, 0]
+    m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(_tile_live(0, j, pos, win, 1, block_k))
+    def _compute():
+        q = q_ref[...].reshape(groups, q_ref.shape[-1])
+        k = k_ref[...].reshape(block_k, k_ref.shape[-1])
+        v = v_ref[...].reshape(block_k, v_ref.shape[-1])
+        s = _dot(q, k, trans_b=True) * sm_scale          # (G, bk)
+        c = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        kpos = j * block_k + c
+        keep = (kpos <= pos) & (kpos < kv_len)
+        keep &= (win <= 0) | (pos - kpos < win)
+        s = jnp.where(keep, s, NEG_INF)
+        m = jnp.max(s, axis=1, keepdims=True)
+        p = jnp.where(keep, jnp.exp(s - m), 0.0)
+        m_ref[...] = jnp.broadcast_to(m[:, 0].reshape(m_ref.shape),
+                                      m_ref.shape)
+        l_ref[...] = jnp.sum(p, axis=1).reshape(l_ref.shape)
+        acc_ref[...] = _dot(p.astype(v.dtype), v).reshape(acc_ref.shape)
+
+
+def flash_decode(q, k, v, pos, *, window=0, sm_scale=None,
+                 block_k: int = DEFAULT_DECODE_BLOCK_K,
+                 interpret: bool | None = None):
+    """Split-KV single-token decode. q: (B, 1, H, Dk); k/v: the full
+    (B, S, KV, Dk/Dv) cache lanes; pos: scalar or (B,) per-slot positions
+    (``decode_keep`` semantics: key t visible iff t <= pos[b] and within
+    the window). The cache splits into ``ceil(S / block_k)`` independent
+    key chunks — each computes a partial (m, l, acc) in one grid cell, and
+    the partials merge with the standard online-softmax combine, so long
+    caches parallelize across chunks instead of serializing through one
+    accumulator. Returns (B, 1, H, Dv)."""
+    B, Sq, H, Dk = q.shape
+    _, S, KV, _ = k.shape
+    Dv = v.shape[-1]
+    if Sq != 1:
+        raise ValueError(f"flash_decode wants a single query row, Sq={Sq}")
+    if H % KV:
+        raise ValueError(f"H={H} not divisible by KV={KV}")
+    G = H // KV
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(Dk)
+    interpret = resolve_interpret(interpret)
+    block_k = min(block_k, _round_up(S, 16))
+    pk = _round_up(S, block_k) - S
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    ns = (S + pk) // block_k
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1, 1),
+                           (B, 1))
+    window = jnp.asarray(window, jnp.int32).reshape(1, 1)
+    scalar = lambda im: pl.BlockSpec((1, 1), im)
+    m, l, acc = pl.pallas_call(
+        functools.partial(_decode_kernel, sm_scale=float(sm_scale),
+                          kv_len=S, block_k=block_k, groups=G),
+        grid=(B, KV, ns),
+        in_specs=[scalar(lambda b, h, j: (b, 0)),
+                  scalar(lambda b, h, j: (0, 0)),
+                  pl.BlockSpec((1, 1, G, Dk), lambda b, h, j: (b, 0, h, 0)),
+                  pl.BlockSpec((1, block_k, 1, Dk),
+                               lambda b, h, j: (b, j, h, 0)),
+                  pl.BlockSpec((1, block_k, 1, Dv),
+                               lambda b, h, j: (b, j, h, 0))],
+        out_specs=[pl.BlockSpec((1, 1, 1, G), lambda b, h, j: (b, h, j, 0)),
+                   pl.BlockSpec((1, 1, 1, G), lambda b, h, j: (b, h, j, 0)),
+                   pl.BlockSpec((1, 1, 1, G, Dv),
+                                lambda b, h, j: (b, h, j, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((B, KV, ns, G), jnp.float32),
+                   jax.ShapeDtypeStruct((B, KV, ns, G), jnp.float32),
+                   jax.ShapeDtypeStruct((B, KV, ns, G, Dv), jnp.float32)],
+        interpret=interpret,
+    )(pos, window, q, k, v)
+    # online-softmax combine across the independent KV splits
+    m_g = jnp.max(m, axis=2, keepdims=True)                  # (B,KV,1,G)
+    alpha = jnp.exp(m - m_g)
+    l_g = jnp.sum(alpha * l, axis=2)                         # (B,KV,G)
+    out = jnp.sum(alpha[..., None] * acc, axis=2)            # (B,KV,G,Dv)
+    out = out / jnp.maximum(l_g, 1e-30)[..., None]
+    return out.reshape(B, 1, H, Dv).astype(q.dtype)

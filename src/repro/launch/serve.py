@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config, get_config
+from repro.configs.base import with_attn_impl
 from repro.models import build_model
 from repro.serve import Engine, SamplingParams
 from repro.train.serve import generate
@@ -46,6 +47,12 @@ def main():
     ap.add_argument("--fused-sampling", action="store_true",
                     help="slot_gather Pallas kernel fast path "
                          "(greedy/temperature only)")
+    ap.add_argument("--attn-impl", default=None,
+                    choices=["auto", "flash", "ref", "blockwise"],
+                    help="attention implementation for prefill/decode: "
+                         "Pallas flash kernels, einsum ref oracles, or "
+                         "the blockwise scan (default: auto — flash "
+                         "where Pallas compiles)")
     ap.add_argument("--reference", action="store_true",
                     help="static-batch greedy generate() instead of the "
                          "engine")
@@ -54,6 +61,7 @@ def main():
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.family != "decoder":
         raise SystemExit(f"{cfg.family!r} models have no serve path")
+    cfg = with_attn_impl(cfg, args.attn_impl)
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
 

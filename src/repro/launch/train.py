@@ -24,6 +24,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
+from repro.configs.base import with_attn_impl
 from repro.data.synthetic import LMTokenSource, ImageSource
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
@@ -87,6 +88,12 @@ def main():
                          "pinned to 1)")
     ap.add_argument("--mode", default="zero1", choices=["zero1", "ar"],
                     help="gspmd gradient reduction mode")
+    ap.add_argument("--attn-impl", default=None,
+                    choices=["auto", "flash", "ref", "blockwise"],
+                    help="attention implementation for the train step: "
+                         "Pallas flash kernels (fwd + custom-VJP bwd), "
+                         "einsum ref oracles, or the blockwise scan "
+                         "(default: auto — flash where Pallas compiles)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--resume", default=None, metavar="CKPT",
                     help="restore state/step/rng offset from a checkpoint "
@@ -94,6 +101,7 @@ def main():
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg = with_attn_impl(cfg, args.attn_impl)
     model = build_model(cfg)
     mesh = make_host_mesh()
     jax.set_mesh(mesh)

@@ -4,16 +4,56 @@ Train path computes full (windowed-)causal attention; decode path attends one
 query against a KV cache (GQA caches k/v; MLA caches the 512-d latent + the
 shared rope key and uses the absorbed-matmul trick, so the cache is 576
 floats/token as in the paper).
+
+Three interchangeable attention implementations back every path
+(``resolve_attn_impl``; DESIGN.md "Attention kernels"):
+
+- ``flash``:     the Pallas tiled kernels (``kernels/flash_attention``) —
+                 fused online-softmax forward + custom-VJP backward for
+                 train, q-chunk×cache tiles for prefill, split-KV for
+                 decode. The default wherever Pallas compiles (TPU).
+- ``ref``:       the XLA einsum paths below — the parity oracles, and the
+                 default on interpret-only backends (CPU). Long sequences
+                 still route through the blockwise scan when
+                 ``AttentionConfig.block_kv`` is set.
+- ``blockwise``: force the ``lax.scan`` online-softmax fallback.
+
+Selection: ``REPRO_ATTN_IMPL`` env > ``AttentionConfig.attn_impl`` >
+backend default.
 """
 from __future__ import annotations
+
+import math
+import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, AttentionConfig
+from repro.kernels.flash_attention import flash_attention, flash_decode
 from repro.models.common import (apply_rope, dense_init, head_rms_norm)
 
 NEG_INF = -1e30
+
+_IMPLS = ("flash", "ref", "blockwise")
+
+
+def resolve_attn_impl(a: AttentionConfig | None) -> str:
+    """Resolve the attention implementation for a config.
+
+    Priority: ``REPRO_ATTN_IMPL`` env > ``a.attn_impl`` > backend default
+    (``flash`` where Pallas kernels compile — i.e. not in interpreter
+    mode — else the einsum ``ref`` oracles)."""
+    impl = os.environ.get("REPRO_ATTN_IMPL", "") or (
+        (a.attn_impl or "") if a is not None else "")
+    if impl in ("", "auto"):
+        from repro.kernels import default_interpret
+        return "ref" if default_interpret() else "flash"
+    if impl not in _IMPLS:
+        raise ValueError(
+            f"REPRO_ATTN_IMPL / attn_impl must be one of {_IMPLS} or "
+            f"'auto', got {impl!r}")
+    return impl
 
 
 # ---------------------------------------------------------------------------
@@ -134,8 +174,17 @@ def _update_cache_rows(buf, new, pos, pos_vec):
 
 
 def _masked_softmax(scores, keep):
+    """Masked softmax that never materializes an fp32 copy of the score
+    tensor: max-subtract and exp run in the score dtype and only the
+    row-sum accumulates in fp32 (XLA fuses the upcast into the
+    reduction), so the dense path's peak memory is the score tensor
+    itself rather than 3x it. Weights return in the score dtype; pinned
+    by the peak-memory regression in tests/test_flash_attention.py."""
     scores = jnp.where(keep, scores, NEG_INF)
-    return jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    m = jax.lax.stop_gradient(jnp.max(scores, axis=-1, keepdims=True))
+    e = jnp.exp(scores - m)
+    l = jnp.sum(e, axis=-1, keepdims=True, dtype=jnp.float32)
+    return e / l.astype(e.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -170,16 +219,21 @@ def gqa_attend(q, k, v, keep, a: AttentionConfig):
 
 
 def gqa_attend_blockwise(q, k, v, q_pos, k_pos, window, a: AttentionConfig,
-                         block: int = 1024):
+                         block: int = 1024, scale=None):
     """Flash-style attention: lax.scan over KV blocks with an online
     softmax, so the (Sq, Sk) score matrix is never materialized in HBM —
     the per-step working set is (Sq, block). Beyond-paper optimization for
     the memory-bound prefill/train shapes (see EXPERIMENTS.md §Perf).
+
+    ``v`` may have a different trailing dim than q/k (the MLA absorbed
+    layout: q/k in the latent+rope space, v = the latent); ``scale``
+    overrides the default 1/sqrt(head_dim) score scale.
     """
     B, Sq, H, hd = q.shape
     KV = k.shape[2]
     G = H // KV
     Sk = k.shape[1]
+    hv = v.shape[-1]
     pad = (-Sk) % block
     if pad:
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
@@ -187,10 +241,11 @@ def gqa_attend_blockwise(q, k, v, q_pos, k_pos, window, a: AttentionConfig,
         k_pos = jnp.pad(k_pos, (0, pad), constant_values=10 ** 9)
     nb = (Sk + pad) // block
     qg = q.reshape(B, Sq, KV, G, hd)
-    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
 
     kb = k.reshape(B, nb, block, KV, hd).transpose(1, 0, 2, 3, 4)
-    vb = v.reshape(B, nb, block, KV, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, block, KV, hv).transpose(1, 0, 2, 3, 4)
     pb = k_pos.reshape(nb, block)
 
     def step(carry, inp):
@@ -218,25 +273,34 @@ def gqa_attend_blockwise(q, k, v, q_pos, k_pos, window, a: AttentionConfig,
 
     m0 = jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32)
     l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
-    a0 = jnp.zeros((B, KV, G, Sq, hd), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, hv), jnp.float32)
     (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, pb),
                                   unroll=nb if a.block_unroll else 1)
     out = acc / jnp.maximum(l, 1e-30)[..., None]
-    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hv)
     return out.astype(q.dtype)
 
 
-def gqa_forward(p, x, positions, a: AttentionConfig, window: int):
+def gqa_forward(p, x, positions, a: AttentionConfig, window: int,
+                impl: str | None = None):
     """Training/prefill full self-attention. x:(B,S,d)."""
+    impl = impl or resolve_attn_impl(a)
     q, k, v = _project_qkv(p, x, a)
     if a.qk_norm:
         q, k = head_rms_norm(q), head_rms_norm(k)
     q = apply_rope(q, positions, a.rope_theta)
     k = apply_rope(k, positions, a.rope_theta)
     B, S = x.shape[:2]
-    if a.block_kv and S > a.block_kv:
+    if impl == "flash":
+        # q and k are rows of the same sequence, so the kernel's row-index
+        # masking (q_off=0) is exact for any *common-offset* positions:
+        # causality and window distance only depend on q_pos - k_pos.
+        # Packed/non-monotonic position vectors need the ref path, whose
+        # mask compares the actual position values.
+        out = flash_attention(q, k, v, window=window)
+    elif impl == "blockwise" or (a.block_kv and S > a.block_kv):
         out = gqa_attend_blockwise(q, k, v, positions[0], positions[0],
-                                   window, a, block=a.block_kv)
+                                   window, a, block=a.block_kv or 1024)
     else:
         keep = causal_window_mask(positions[0], positions[0], window)
         out = gqa_attend(q, k, v, keep, a)
@@ -250,11 +314,13 @@ def gqa_init_cache(batch: int, max_len: int, a: AttentionConfig, dtype):
     }
 
 
-def gqa_decode(p, cache, x, pos, a: AttentionConfig, window: int):
+def gqa_decode(p, cache, x, pos, a: AttentionConfig, window: int,
+               impl: str | None = None):
     """One-token decode. x:(B,1,d); pos: scalar int (current index) or a
     (B,) vector of per-sequence indices (serving engine slots).
 
     Returns (out, new_cache)."""
+    impl = impl or resolve_attn_impl(a)
     q, k, v = _project_qkv(p, x, a)
     if a.qk_norm:
         q, k = head_rms_norm(q), head_rms_norm(k)
@@ -264,24 +330,31 @@ def gqa_decode(p, cache, x, pos, a: AttentionConfig, window: int):
     ck = _update_cache_rows(cache["k"], k, pos, pos_vec)
     cv = _update_cache_rows(cache["v"], v, pos, pos_vec)
     S = ck.shape[1]
-    if pos_vec is None:
-        keep = decode_keep(jnp.arange(S), pos, window)[None, :]   # (1,S)
-    else:
-        keep = decode_keep_batched(jnp.arange(S), pos_vec, window)[:, None, :]
-    out = gqa_attend(q, ck, cv, keep, a)
     B = x.shape[0]
+    if impl == "flash":
+        out = flash_decode(q, ck, cv,
+                           pos_vec if pos_vec is not None else pos,
+                           window=window)
+    else:
+        if pos_vec is None:
+            keep = decode_keep(jnp.arange(S), pos, window)[None, :]  # (1,S)
+        else:
+            keep = decode_keep_batched(jnp.arange(S), pos_vec,
+                                       window)[:, None, :]
+        out = gqa_attend(q, ck, cv, keep, a)
     y = jnp.einsum("bsf,fd->bsd", out.reshape(B, 1, -1), p["wo"])
     return y, {"k": ck, "v": cv}
 
 
 def gqa_prefill(p, cache, x, positions, pos0, a: AttentionConfig,
-                window: int):
+                window: int, impl: str | None = None):
     """Chunked prompt prefill: attend a whole (B,C,d) chunk against the
     cache and write its K/V rows at [pos0, pos0+C) in one pass.
 
     ``positions`` (B,C) are absolute positions (pos0 + arange(C)); rows
     beyond the valid prompt length write pad garbage that is masked out of
     every later read (causality) and overwritten by the decode steps."""
+    impl = impl or resolve_attn_impl(a)
     q, k, v = _project_qkv(p, x, a)
     if a.qk_norm:
         q, k = head_rms_norm(q), head_rms_norm(k)
@@ -292,9 +365,14 @@ def gqa_prefill(p, cache, x, positions, pos0, a: AttentionConfig,
     cv = jax.lax.dynamic_update_slice_in_dim(
         cache["v"], v.astype(cache["v"].dtype), pos0, axis=1)
     S = ck.shape[1]
-    keep = causal_window_mask(positions[0], jnp.arange(S), window)   # (C,S)
-    out = gqa_attend(q, ck, cv, keep, a)
     B, C = x.shape[:2]
+    if impl == "flash":
+        # q-chunk x full-cache tiles; rows start at the chunk origin
+        out = flash_attention(q, ck, cv, q_off=positions[:, 0],
+                              window=window)
+    else:
+        keep = causal_window_mask(positions[0], jnp.arange(S), window)
+        out = gqa_attend(q, ck, cv, keep, a)
     y = jnp.einsum("bsf,fd->bsd", out.reshape(B, C, -1), p["wo"])
     return y, {"k": ck, "v": cv}
 
@@ -303,8 +381,19 @@ def gqa_prefill(p, cache, x, positions, pos0, a: AttentionConfig,
 # MLA (DeepSeek-V2)
 # ---------------------------------------------------------------------------
 
-def mla_forward(p, x, positions, a: AttentionConfig, window: int):
-    """Training/prefill MLA. Naive (non-absorbed) expansion."""
+def mla_forward(p, x, positions, a: AttentionConfig, window: int,
+                impl: str | None = None):
+    """Training/prefill MLA.
+
+    ``flash``/``blockwise`` attend in the absorbed-matmul layout — W_uk is
+    folded into the query so keys are the cached (latent ‖ rope-key)
+    vectors and values are the latent itself (the same math the decode
+    path uses), which keeps attention a single KV-head problem and never
+    expands per-head k_nope/v to HBM. The ``ref`` dense path keeps the
+    naive per-head expansion as the oracle, but long sequences route
+    through the shared blockwise scan when ``block_kv`` is set (so
+    long-seq MLA never builds the (B,H,S,S) score matrix either)."""
+    impl = impl or resolve_attn_impl(a)
     B, S, _ = x.shape
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     q_nope, q_rope = jnp.split(q, [a.qk_nope_dim], axis=-1)
@@ -314,14 +403,34 @@ def mla_forward(p, x, positions, a: AttentionConfig, window: int):
     k_rope = jnp.einsum("bsd,dr->bsr", x, p["wkr"])          # (B,S,rope)
     k_rope = apply_rope(k_rope[:, :, None, :], positions,
                         a.rope_theta)[:, :, 0, :]
+
+    if impl == "flash" or impl == "blockwise" or (
+            a.block_kv and S > a.block_kv):
+        lat_scale = 1.0 / math.sqrt(a.qk_nope_dim + a.qk_rope_dim)
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wuk"])
+        q_cat = jnp.concatenate([q_lat, q_rope], axis=-1)    # (B,S,H,R+rope)
+        k_cat = jnp.concatenate([c_kv, k_rope], axis=-1)[:, :, None]
+        v_lat = c_kv[:, :, None]                             # (B,S,1,R)
+        if impl == "flash":
+            o_lat = flash_attention(q_cat, k_cat, v_lat, window=window,
+                                    sm_scale=lat_scale)
+        else:
+            o_lat = gqa_attend_blockwise(
+                q_cat, k_cat, v_lat, positions[0], positions[0], window,
+                a, block=a.block_kv or 1024,
+                scale=jnp.float32(lat_scale))
+        out = jnp.einsum("bshr,rhk->bshk", o_lat.astype(x.dtype),
+                         p["wuv"]).reshape(B, S, -1)
+        return jnp.einsum("bsf,fd->bsd", out, p["wo"])
+
     k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["wuk"])     # (B,S,H,nope)
     v = jnp.einsum("bsr,rhk->bshk", c_kv, p["wuv"])          # (B,S,H,vd)
-
     scale = 1.0 / jnp.sqrt(a.qk_nope_dim + a.qk_rope_dim).astype(x.dtype)
     s_nope = jnp.einsum("bshk,bthk->bhst", q_nope, k_nope)
     s_rope = jnp.einsum("bshk,btk->bhst", q_rope, k_rope)
     keep = causal_window_mask(positions[0], positions[0], window)
-    w = _masked_softmax((s_nope + s_rope) * scale, keep[None, None]).astype(x.dtype)
+    w = _masked_softmax((s_nope + s_rope) * scale,
+                        keep[None, None]).astype(x.dtype)
     out = jnp.einsum("bhst,bthk->bshk", w, v).reshape(B, S, -1)
     return jnp.einsum("bsf,fd->bsd", out, p["wo"])
 
@@ -403,11 +512,12 @@ def mla_prefill(p, cache, x, positions, pos0, a: AttentionConfig,
 # dispatch
 # ---------------------------------------------------------------------------
 
-def attn_forward(p, x, positions, cfg: ArchConfig, window: int):
+def attn_forward(p, x, positions, cfg: ArchConfig, window: int,
+                 impl: str | None = None):
     a = cfg.attention
     if a.kv_lora_rank:
-        return mla_forward(p, x, positions, a, window)
-    return gqa_forward(p, x, positions, a, window)
+        return mla_forward(p, x, positions, a, window, impl=impl)
+    return gqa_forward(p, x, positions, a, window, impl=impl)
 
 
 def attn_init_cache(batch: int, max_len: int, cfg: ArchConfig, dtype):
@@ -417,15 +527,20 @@ def attn_init_cache(batch: int, max_len: int, cfg: ArchConfig, dtype):
     return gqa_init_cache(batch, max_len, a, dtype)
 
 
-def attn_decode(p, cache, x, pos, cfg: ArchConfig, window: int):
+def attn_decode(p, cache, x, pos, cfg: ArchConfig, window: int,
+                impl: str | None = None):
     a = cfg.attention
     if a.kv_lora_rank:
+        # MLA decode attends in the latent space already ((B,H,1,S) scores
+        # against the 576-float cache rows) — the absorbed ref path *is*
+        # the memory-lean kernel here
         return mla_decode(p, cache, x, pos, a, window)
-    return gqa_decode(p, cache, x, pos, a, window)
+    return gqa_decode(p, cache, x, pos, a, window, impl=impl)
 
 
-def attn_prefill(p, cache, x, positions, pos0, cfg: ArchConfig, window: int):
+def attn_prefill(p, cache, x, positions, pos0, cfg: ArchConfig, window: int,
+                 impl: str | None = None):
     a = cfg.attention
     if a.kv_lora_rank:
         return mla_prefill(p, cache, x, positions, pos0, a, window)
-    return gqa_prefill(p, cache, x, positions, pos0, a, window)
+    return gqa_prefill(p, cache, x, positions, pos0, a, window, impl=impl)

@@ -108,11 +108,13 @@ def decode_train(params, tokens, enc_out, cfg: ArchConfig,
     h = params["embed"][tokens].astype(dtype)
     B, S = h.shape[:2]
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    # hoisted like decoder_forward: resolve once, not per scan-body layer
+    impl = attn_mod.resolve_attn_impl(cfg.attention)
 
     def body(x, lp):
         x = x + attn_mod.gqa_forward(
             lp["self_attn"], rms_norm(x, lp["ln1"], cfg.norm_eps),
-            positions, cfg.attention, 0)
+            positions, cfg.attention, 0, impl=impl)
         x = x + _cross_attend(lp["cross_attn"],
                               rms_norm(x, lp["ln_x"], cfg.norm_eps),
                               enc_out, positions, cfg)

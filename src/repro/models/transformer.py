@@ -120,17 +120,20 @@ def _init_layer(key, cfg: ArchConfig, kind: str, dtype):
     return p
 
 
-def _apply_layer(p, x, positions, cfg: ArchConfig, kind: str, window):
+def _apply_layer(p, x, positions, cfg: ArchConfig, kind: str, window,
+                 attn_impl=None):
     """Full-sequence layer application. Returns (x, aux)."""
     eps = cfg.norm_eps
     aux = jnp.zeros((), jnp.float32)
     h = rms_norm(x, p["ln1"], eps)
     if kind == "dense" or kind == "moe":
-        x = x + attn_mod.attn_forward(p["attn"], h, positions, cfg, window)
+        x = x + attn_mod.attn_forward(p["attn"], h, positions, cfg, window,
+                                      impl=attn_impl)
     elif kind == "ssm":
         x = x + ssm_mod.ssm_forward(p["ssm"], h, cfg.d_model, cfg.ssm, eps)
     elif kind == "hybrid":
-        ya = attn_mod.attn_forward(p["attn"], h, positions, cfg, window)
+        ya = attn_mod.attn_forward(p["attn"], h, positions, cfg, window,
+                                   impl=attn_impl)
         ys = ssm_mod.ssm_forward(p["ssm"], h, cfg.d_model, cfg.ssm, eps)
         x = x + 0.5 * (rms_norm(ya, p["fuse_na"], eps)
                        + rms_norm(ys, p["fuse_ns"], eps))
@@ -143,13 +146,14 @@ def _apply_layer(p, x, positions, cfg: ArchConfig, kind: str, window):
     return x, aux
 
 
-def _decode_layer(p, cache, x, pos, cfg: ArchConfig, kind: str, window):
+def _decode_layer(p, cache, x, pos, cfg: ArchConfig, kind: str, window,
+                  attn_impl=None):
     eps = cfg.norm_eps
     h = rms_norm(x, p["ln1"], eps)
     new_cache = {}
     if kind in ("dense", "moe"):
         y, new_cache["attn"] = attn_mod.attn_decode(
-            p["attn"], cache["attn"], h, pos, cfg, window)
+            p["attn"], cache["attn"], h, pos, cfg, window, impl=attn_impl)
         x = x + y
     elif kind == "ssm":
         y, new_cache["ssm"] = ssm_mod.ssm_decode(
@@ -157,7 +161,7 @@ def _decode_layer(p, cache, x, pos, cfg: ArchConfig, kind: str, window):
         x = x + y
     elif kind == "hybrid":
         ya, new_cache["attn"] = attn_mod.attn_decode(
-            p["attn"], cache["attn"], h, pos, cfg, window)
+            p["attn"], cache["attn"], h, pos, cfg, window, impl=attn_impl)
         ys, new_cache["ssm"] = ssm_mod.ssm_decode(
             p["ssm"], cache["ssm"], h, cfg.d_model, cfg.ssm, eps)
         x = x + 0.5 * (rms_norm(ya, p["fuse_na"], eps)
@@ -175,7 +179,7 @@ def _decode_layer(p, cache, x, pos, cfg: ArchConfig, kind: str, window):
 
 
 def _prefill_layer(p, cache, x, positions, pos0, valid_count, valid_flat,
-                   cfg: ArchConfig, kind: str, window):
+                   cfg: ArchConfig, kind: str, window, attn_impl=None):
     """Whole-chunk layer application that also writes the layer cache.
 
     x: (B,C,d); positions (B,C) absolute; pos0 scalar chunk start;
@@ -186,7 +190,8 @@ def _prefill_layer(p, cache, x, positions, pos0, valid_count, valid_flat,
     new_cache = {}
     if kind in ("dense", "moe"):
         y, new_cache["attn"] = attn_mod.attn_prefill(
-            p["attn"], cache["attn"], h, positions, pos0, cfg, window)
+            p["attn"], cache["attn"], h, positions, pos0, cfg, window,
+            impl=attn_impl)
         x = x + y
     elif kind == "ssm":
         y, new_cache["ssm"] = ssm_mod.ssm_prefill(
@@ -195,7 +200,8 @@ def _prefill_layer(p, cache, x, positions, pos0, valid_count, valid_flat,
         x = x + y
     elif kind == "hybrid":
         ya, new_cache["attn"] = attn_mod.attn_prefill(
-            p["attn"], cache["attn"], h, positions, pos0, cfg, window)
+            p["attn"], cache["attn"], h, positions, pos0, cfg, window,
+            impl=attn_impl)
         ys, new_cache["ssm"] = ssm_mod.ssm_prefill(
             p["ssm"], cache["ssm"], h, valid_count, cfg.d_model,
             cfg.ssm, eps)
@@ -283,6 +289,10 @@ def decoder_forward(params, batch, cfg: ArchConfig, *, unroll: bool = False):
     wins = layer_windows(cfg, "train", h.shape[1])
     kinds = layer_kinds(cfg)
     segs = segments(cfg)
+    # resolve the attention implementation once per forward (env/config/
+    # backend dispatch happens here, not per layer inside the scan body)
+    attn_impl = (attn_mod.resolve_attn_impl(cfg.attention)
+                 if cfg.attention is not None else None)
 
     aux_total = jnp.zeros((), jnp.float32)
     li = 0
@@ -297,7 +307,8 @@ def decoder_forward(params, batch, cfg: ArchConfig, *, unroll: bool = False):
             x, aux = carry
             lp, w = xs
             win = _static if _static is not None else w
-            x, a = _apply_layer(lp, x, positions, cfg, _kind, win)
+            x, a = _apply_layer(lp, x, positions, cfg, _kind, win,
+                                attn_impl=attn_impl)
             x = act.constrain(x)
             return (x, aux + a), None
 
@@ -360,6 +371,8 @@ def decoder_decode_step(params, caches, tokens, pos, cfg: ArchConfig,
     h = params["embed"][tokens].astype(dtype)
     wins = layer_windows(cfg, "decode", seq_len)
     segs = segments(cfg)
+    attn_impl = (attn_mod.resolve_attn_impl(cfg.attention)
+                 if cfg.attention is not None else None)
 
     li = 0
     new_caches = []
@@ -374,7 +387,8 @@ def decoder_decode_step(params, caches, tokens, pos, cfg: ArchConfig,
         def body(x, xs, _kind=kind, _static=static_win):
             lp, lc, w = xs
             win = _static if _static is not None else w
-            x, nc = _decode_layer(lp, lc, x, pos, cfg, _kind, win)
+            x, nc = _decode_layer(lp, lc, x, pos, cfg, _kind, win,
+                                  attn_impl=attn_impl)
             return x, nc
 
         if cfg.scan_layers and count > 1:
@@ -427,6 +441,8 @@ def decoder_prefill(params, caches, tokens, pos0, valid, cfg: ArchConfig,
                                   (B, C)).reshape(-1)
     wins = layer_windows(cfg, "decode", seq_len)
     segs = segments(cfg)
+    attn_impl = (attn_mod.resolve_attn_impl(cfg.attention)
+                 if cfg.attention is not None else None)
 
     li = 0
     new_caches = []
@@ -442,7 +458,8 @@ def decoder_prefill(params, caches, tokens, pos0, valid, cfg: ArchConfig,
             lp, lc, w = xs
             win = _static if _static is not None else w
             x, nc = _prefill_layer(lp, lc, x, positions, pos0, valid,
-                                   valid_flat, cfg, _kind, win)
+                                   valid_flat, cfg, _kind, win,
+                                   attn_impl=attn_impl)
             x = act.constrain(x)
             return x, nc
 

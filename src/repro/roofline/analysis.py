@@ -210,3 +210,45 @@ def model_flops_6nd(n_active_params: int, tokens: int, kind: str) -> float:
     """Analytic MODEL_FLOPS: 6*N*D train, 2*N*D inference (fwd only)."""
     mult = 6.0 if kind == "train" else 2.0
     return mult * n_active_params * tokens
+
+
+def attention_flops_bytes(*, batch: int, q_len: int, kv_len: int,
+                          heads: int, kv_heads: int, head_dim_k: int,
+                          head_dim_v: int = 0, window: int = 0,
+                          causal: bool = True, q_start: int = 0,
+                          kind: str = "fwd", dtype_bytes: int = 2) -> dict:
+    """Analytic FLOPs and minimal HBM bytes for (windowed-)causal
+    attention — the roofline an exact fused kernel can at best achieve.
+
+    ``pairs`` counts surviving (q, k) interactions: query at absolute
+    position ``q_start + i`` sees ``min(pos+1, kv_len)`` keys, clipped to
+    ``window`` when one is set — so windowed layers get a *linear* (not
+    quadratic) compute term and the bench can report achieved-vs-roofline
+    per masking mode. FLOPs: 2·(Dk+Dv) per pair per head forward (QK^T +
+    PV); the backward recomputes the score tile and runs the dQ/dK/dV
+    matmuls (3·Dk + 2·Dv dots of 2 FLOPs each). Bytes: one q/k/v read +
+    one out write at ``dtype_bytes`` (+ the fp32 lse/di residual rows and
+    a re-read of everything for ``fwd+bwd``) — no (S, S) term at all,
+    which is exactly what separates flash from the dense XLA path."""
+    import numpy as np
+    Dk = head_dim_k
+    Dv = head_dim_v or head_dim_k
+    if causal:
+        pos = q_start + np.arange(q_len, dtype=np.int64)
+        per_q = np.minimum(pos + 1, kv_len)
+        if window > 0:
+            per_q = np.minimum(per_q, window)
+        pairs = int(per_q.sum())
+    else:
+        pairs = q_len * kv_len
+    f_fwd = 2.0 * batch * heads * pairs * (Dk + Dv)
+    f_bwd = 2.0 * batch * heads * pairs * (3 * Dk + 2 * Dv)
+    flops = f_fwd + (f_bwd if kind != "fwd" else 0.0)
+    qo_bytes = batch * q_len * heads * (Dk + Dv) * dtype_bytes
+    kv_bytes = batch * kv_len * kv_heads * (Dk + Dv) * dtype_bytes
+    hbm = qo_bytes + kv_bytes
+    if kind != "fwd":
+        hbm += 2 * (qo_bytes + kv_bytes)          # re-read + grad writes
+        hbm += batch * q_len * heads * 2 * 4      # lse + di, fp32
+    return {"flops": flops, "hbm_bytes": float(hbm), "pairs": pairs,
+            "intensity": flops / max(hbm, 1.0)}

@@ -87,11 +87,19 @@ class Engine:
     def __init__(self, model, params, *, max_slots: int = 8,
                  max_seq: int = 256, prefill_chunk: int = 32,
                  mesh=None, fused_sampling: bool = False,
-                 unroll: bool = False):
+                 unroll: bool = False, attn_impl: str | None = None):
         cfg = model.cfg
         if cfg.family != "decoder":
             raise ValueError(f"serve engine supports decoder models, "
                              f"got family={cfg.family!r}")
+        if attn_impl and cfg.attention is not None:
+            # pin the attention implementation for this engine (prefill's
+            # q-chunk x cache tiles and decode's split-KV both route
+            # through it); attention-less families (pure SSM) ignore it
+            from repro.configs.base import with_attn_impl
+            from repro.models import build_model
+            cfg = with_attn_impl(cfg, attn_impl)
+            model = build_model(cfg)
         if cfg.ssm is not None and prefill_chunk % cfg.ssm.chunk:
             # SSD block boundaries must align across chunked calls for the
             # cache state to match a single-call prefill bitwise

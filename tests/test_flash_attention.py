@@ -1,0 +1,535 @@
+"""Flash-attention parity suite: Pallas fwd/bwd kernels (interpret mode on
+CPU) vs the einsum oracles across causal/sliding windows, GQA group sizes
+(incl. group=1 MHA and ragged S), decode vs prefill vs train forward, the
+MLA absorbed layout, end-to-end decoder_loss gradients, and the
+no-(S,S)-materialization guarantees."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke_config
+from repro.configs.registry import ASSIGNED_ARCHS
+from repro.configs.base import AttentionConfig
+from repro.kernels.flash_attention import flash_attention, flash_decode
+from repro.models import attention as attn_mod
+from repro.models import build_model
+from repro.models.attention import (causal_window_mask, gqa_attend,
+                                    gqa_attend_blockwise, gqa_decode,
+                                    gqa_forward, gqa_init_cache, gqa_prefill,
+                                    init_gqa, init_mla, mla_forward,
+                                    resolve_attn_impl)
+
+
+def oracle(q, k, v, q_off, window, sm_scale):
+    """Dense fp32 reference with explicit GQA grouping, Dk != Dv support,
+    absolute q positions and windowing — the flash kernel contract."""
+    B, Sq, H, Dk = q.shape
+    KV, Sk = k.shape[2], k.shape[1]
+    G = H // KV
+    qg = q.astype(jnp.float32).reshape(B, Sq, KV, G, Dk)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg,
+                   k.astype(jnp.float32)) * sm_scale
+    qpos = q_off[:, None] + jnp.arange(Sq)[None]
+    kpos = jnp.arange(Sk)
+    keep = kpos[None, None] <= qpos[..., None]
+    if window > 0:
+        keep &= (qpos[..., None] - kpos[None, None]) < window
+    s = jnp.where(keep[:, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", w, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, v.shape[-1])
+
+
+def _qkv(key, B, Sq, Sk, H, KV, Dk, Dv, dtype=jnp.float32):
+    q = jax.random.normal(jax.random.fold_in(key, 1), (B, Sq, H, Dk), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 2), (B, Sk, KV, Dk), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 3), (B, Sk, KV, Dv), dtype)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("window", [0, 7, 16])
+@pytest.mark.parametrize("H,KV", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("S", [32, 50])   # 50: ragged, not a tile multiple
+def test_flash_fwd_matches_oracle(window, H, KV, S):
+    q, k, v = _qkv(jax.random.key(window * 100 + H * 10 + S), 2, S, S, H,
+                   KV, 16, 16)
+    got = flash_attention(q, k, v, window=window, block_q=16, block_k=16,
+                          interpret=True)
+    want = oracle(q, k, v, jnp.zeros((2,), jnp.int32), window,
+                  1.0 / np.sqrt(16))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_fwd_bf16_io_fp32_accumulators():
+    q, k, v = _qkv(jax.random.key(0), 1, 48, 48, 4, 2, 32, 32)
+    want = oracle(q, k, v, jnp.zeros((1,), jnp.int32), 0, 1 / np.sqrt(32))
+    got = flash_attention(q.astype(jnp.bfloat16), k.astype(jnp.bfloat16),
+                          v.astype(jnp.bfloat16), block_q=16, block_k=16,
+                          interpret=True)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), rtol=0.05, atol=0.05)
+
+
+def test_flash_fwd_traced_window_matches_static():
+    q, k, v = _qkv(jax.random.key(1), 1, 32, 32, 4, 2, 16, 16)
+    f = jax.jit(lambda w: flash_attention(q, k, v, window=w, block_q=8,
+                                          block_k=8, interpret=True))
+    static = flash_attention(q, k, v, window=7, block_q=8, block_k=8,
+                             interpret=True)
+    np.testing.assert_array_equal(np.asarray(f(jnp.int32(7))),
+                                  np.asarray(static))
+
+
+def test_flash_lse_residual_is_logsumexp():
+    B, S, H, KV, D = 1, 32, 4, 2, 16
+    q, k, v = _qkv(jax.random.key(2), B, S, S, H, KV, D, D)
+    _, lse = flash_attention(q, k, v, block_q=8, block_k=8, interpret=True,
+                             return_lse=True)
+    qg = q.reshape(B, S, KV, H // KV, D)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k) / np.sqrt(D)
+    keep = jnp.arange(S)[None, :] <= jnp.arange(S)[:, None]
+    s = jnp.where(keep[None, None, None], s, -1e30)
+    want = jax.scipy.special.logsumexp(s, axis=-1).transpose(0, 3, 1, 2)
+    np.testing.assert_allclose(np.asarray(lse),
+                               np.asarray(want.reshape(B, S, H)),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# backward (custom VJP)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("window", [0, 9])
+@pytest.mark.parametrize("H,KV,S", [(4, 2, 24), (4, 4, 30), (4, 1, 24)])
+def test_flash_bwd_matches_oracle_grads(window, H, KV, S):
+    key = jax.random.key(window + H + S)
+    q, k, v = _qkv(key, 1, S, S, H, KV, 16, 16)
+    cot = jax.random.normal(jax.random.fold_in(key, 4), (1, S, H, 16))
+    qo = jnp.zeros((1,), jnp.int32)
+
+    def f_flash(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, window=window, block_q=8,
+                                       block_k=8, interpret=True) * cot)
+
+    def f_ref(q, k, v):
+        return jnp.sum(oracle(q, k, v, qo, window, 1 / np.sqrt(16)) * cot)
+
+    got = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+    want = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for name, a, b in zip(("dq", "dk", "dv"), got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                                   atol=1e-5, err_msg=name)
+
+
+def test_flash_bwd_bf16_io_matches_fp32_oracle():
+    """The production train dtype: bf16 q/k/v/dout through the custom VJP
+    must track the fp32 oracle gradients within bf16 tolerance (the
+    kernels' fp32 accumulators and lse-based recompute do the work)."""
+    key = jax.random.key(13)
+    S, H, KV = 32, 4, 2
+    q, k, v = _qkv(key, 1, S, S, H, KV, 16, 16)
+    cot = jax.random.normal(jax.random.fold_in(key, 4), (1, S, H, 16))
+    for window in (0, 9):
+        def f_flash(q, k, v, _w=window):
+            return jnp.sum(flash_attention(
+                q.astype(jnp.bfloat16), k.astype(jnp.bfloat16),
+                v.astype(jnp.bfloat16), window=_w, block_q=8, block_k=8,
+                interpret=True).astype(jnp.float32) * cot)
+
+        def f_ref(q, k, v, _w=window):
+            return jnp.sum(oracle(q, k, v, jnp.zeros((1,), jnp.int32), _w,
+                                  1 / np.sqrt(16)) * cot)
+
+        got = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+        want = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+        for name, a, b in zip(("dq", "dk", "dv"), got, want):
+            assert a.dtype == jnp.float32      # cast-of-bf16-input grads
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=0.1, atol=0.1, err_msg=name)
+
+
+def test_flash_bwd_under_remat_and_scan():
+    """The train path wraps attention in jax.checkpoint inside lax.scan."""
+    q, k, v = _qkv(jax.random.key(5), 1, 16, 16, 4, 2, 16, 16)
+
+    def layer(x, _):
+        return x + flash_attention(x, k, v, block_q=8, block_k=8,
+                                   interpret=True), None
+
+    def loss(x):
+        y, _ = jax.lax.scan(jax.checkpoint(layer), x, jnp.arange(2))
+        return jnp.sum(y ** 2)
+
+    g = jax.jit(jax.grad(loss))(q)
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+def test_flash_prefill_chunk_against_cache():
+    """q-chunk x full-cache tiles: rows at q_off, garbage cache rows beyond
+    the causal horizon must not leak into the output."""
+    key = jax.random.key(6)
+    B, C, S, H, KV, D = 2, 8, 40, 4, 2, 16
+    q = jax.random.normal(jax.random.fold_in(key, 1), (B, C, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, D)) * 5
+    v = jax.random.normal(jax.random.fold_in(key, 3), (B, S, KV, D)) * 5
+    q_off = jnp.asarray([5, 11], jnp.int32)
+    for window in (0, 6):
+        got = flash_attention(q, k, v, q_off=q_off, window=window,
+                              block_q=8, block_k=8, interpret=True)
+        want = oracle(q, k, v, q_off, window, 1 / np.sqrt(D))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("window", [0, 5])
+@pytest.mark.parametrize("block_k", [16, 64])   # 64 > S: single split
+def test_flash_decode_split_kv(window, block_k):
+    key = jax.random.key(7)
+    B, S, H, KV, D = 3, 40, 4, 2, 16
+    q = jax.random.normal(jax.random.fold_in(key, 1), (B, 1, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, D))
+    v = jax.random.normal(jax.random.fold_in(key, 3), (B, S, KV, D))
+    pos = jnp.asarray([0, 17, 39], jnp.int32)    # incl. the first token
+    got = flash_decode(q, k, v, pos, window=window, block_k=block_k,
+                       interpret=True)
+    want = oracle(q, k, v, pos, window, 1 / np.sqrt(D))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# module-level dispatch parity (train / prefill / decode / MLA)
+# ---------------------------------------------------------------------------
+
+class _Cfg:
+    d_model = 64
+
+
+@pytest.mark.parametrize("window", [0, 5])
+def test_gqa_paths_flash_vs_ref(window):
+    key = jax.random.key(8)
+    a = AttentionConfig(num_heads=4, num_kv_heads=2, head_dim=16)
+    p = init_gqa(key, _Cfg, a, jnp.float32)
+    B, S = 2, 20
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, S, 64)) * 0.5
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    o_ref = gqa_forward(p, x, pos, a, window, impl="ref")
+    o_fl = gqa_forward(p, x, pos, a, window, impl="flash")
+    np.testing.assert_allclose(np.asarray(o_fl), np.asarray(o_ref),
+                               rtol=1e-5, atol=1e-5)
+
+    caches = [gqa_init_cache(B, S, a, jnp.float32) for _ in range(2)]
+    posm = jnp.broadcast_to(jnp.arange(8)[None], (B, 8))
+    y_ref, c_ref = gqa_prefill(p, caches[0], x[:, :8], posm, 0, a, window,
+                               impl="ref")
+    y_fl, c_fl = gqa_prefill(p, caches[1], x[:, :8], posm, 0, a, window,
+                             impl="flash")
+    np.testing.assert_allclose(np.asarray(y_fl), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    pvec = jnp.asarray([3, 7], jnp.int32)        # per-slot positions
+    d_ref, _ = gqa_decode(p, c_ref, x[:, 8:9], pvec, a, window, impl="ref")
+    d_fl, _ = gqa_decode(p, c_fl, x[:, 8:9], pvec, a, window, impl="flash")
+    np.testing.assert_allclose(np.asarray(d_fl), np.asarray(d_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def _mla_cfg():
+    return AttentionConfig(num_heads=4, num_kv_heads=4, head_dim=32,
+                           kv_lora_rank=64, qk_rope_dim=16, qk_nope_dim=16,
+                           v_head_dim=32)
+
+
+@pytest.mark.parametrize("window", [0, 7])
+def test_mla_forward_flash_absorbed_vs_naive(window):
+    key = jax.random.key(9)
+    a = _mla_cfg()
+    p = init_mla(key, _Cfg, a, jnp.float32)
+    B, S = 2, 20
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, S, 64)) * 0.5
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    o_ref = mla_forward(p, x, pos, a, window, impl="ref")
+    o_fl = mla_forward(p, x, pos, a, window, impl="flash")
+    np.testing.assert_allclose(np.asarray(o_fl), np.asarray(o_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_mla_long_seq_routes_through_blockwise():
+    """Satellite fix: with block_kv set the non-kernel MLA fallback must go
+    through the shared blockwise scan (absorbed layout, Dv != Dk) instead
+    of building the dense (B,H,S,S) matrix — and still match it."""
+    key = jax.random.key(10)
+    a = dataclasses.replace(_mla_cfg(), block_kv=8)
+    p = init_mla(key, _Cfg, a, jnp.float32)
+    B, S = 1, 24                                  # S > block_kv
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, S, 64)) * 0.5
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    dense = mla_forward(p, x, pos, dataclasses.replace(a, block_kv=0),
+                        0, impl="ref")
+    routed = mla_forward(p, x, pos, a, 0, impl="ref")
+    forced = mla_forward(p, x, pos, a, 0, impl="blockwise")
+    np.testing.assert_allclose(np.asarray(routed), np.asarray(dense),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(routed), np.asarray(forced))
+    # and the routed jaxpr carries no (S, S) score tensor
+    jpr = jax.make_jaxpr(
+        lambda x: mla_forward(p, x, pos, a, 0, impl="ref"))(x)
+    assert not _sxs_vars(jpr, S), "blockwise MLA still builds (S,S) scores"
+
+
+def test_blockwise_generalized_dv_and_scale():
+    """gqa_attend_blockwise with v dim != qk dim + explicit scale (the MLA
+    absorbed layout) against the dense oracle."""
+    q, k, v = _qkv(jax.random.key(11), 2, 30, 30, 4, 1, 24, 8)
+    pos = jnp.arange(30)
+    a = AttentionConfig(num_heads=4, num_kv_heads=1, head_dim=24)
+    got = gqa_attend_blockwise(q, k, v, pos, pos, 0, a, block=8,
+                               scale=jnp.float32(0.37))
+    want = oracle(q, k, v, jnp.zeros((2,), jnp.int32), 0, 0.37)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: decoder_loss gradients and the serve engine
+# ---------------------------------------------------------------------------
+
+def _with_impl(cfg, impl):
+    from repro.configs.base import with_attn_impl
+    return with_attn_impl(cfg, impl)
+
+
+# every attention-bearing decoder config in the registry (GQA with/without
+# bias + qk-norm, MLA, MoE routing over attention outputs, hybrid
+# attn-parallel-SSM with sliding/global windows)
+_ATTN_ARCHS = [a for a in ASSIGNED_ARCHS
+               if get_config(a).family == "decoder"
+               and get_config(a).attention is not None]
+
+
+@pytest.mark.parametrize("arch", _ATTN_ARCHS)
+def test_decoder_loss_grads_flash_vs_ref(arch):
+    cfg0 = get_smoke_config(arch).with_overrides(remat=False,
+                                                 dtype="float32")
+    tokens = jax.random.randint(jax.random.key(1), (2, 16), 0,
+                                cfg0.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    out = {}
+    for impl in ("ref", "flash"):
+        model = build_model(_with_impl(cfg0, impl))
+        params = model.init(jax.random.key(0))
+        loss = float(model.loss_fn(params, batch)[0])
+        grads = jax.grad(lambda p: model.loss_fn(p, batch)[0])(params)
+        out[impl] = (loss, grads)
+    assert abs(out["ref"][0] - out["flash"][0]) < 1e-4
+    for a, b in zip(jax.tree.leaves(out["ref"][1]),
+                    jax.tree.leaves(out["flash"][1])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-5)
+
+
+def test_encdec_decoder_self_attn_flash_vs_ref():
+    """The enc-dec decoder's causal self-attention also routes through
+    gqa_forward — its loss/grads must match across implementations too
+    (the registry sweep above covers only the decoder family)."""
+    cfg0 = get_smoke_config("seamless-m4t-large-v2").with_overrides(
+        remat=False, dtype="float32")
+    key = jax.random.key(3)
+    tokens = jax.random.randint(key, (1, 10), 0, cfg0.vocab_size)
+    frames = jax.random.normal(jax.random.fold_in(key, 1),
+                               (1, cfg0.encoder_seq_len, cfg0.d_model))
+    batch = {"tokens": tokens, "labels": tokens, "frames": frames}
+    out = {}
+    for impl in ("ref", "flash"):
+        model = build_model(_with_impl(cfg0, impl))
+        params = model.init(jax.random.key(0))
+        out[impl] = (float(model.loss_fn(params, batch)[0]),
+                     jax.grad(lambda p: model.loss_fn(p, batch)[0])(params))
+    assert abs(out["ref"][0] - out["flash"][0]) < 1e-4
+    for a, b in zip(jax.tree.leaves(out["ref"][1]),
+                    jax.tree.leaves(out["flash"][1])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-5)
+
+
+def test_flash_lse_is_non_differentiable_by_contract():
+    """lse is a residual: its gradient is zero *by stop_gradient* (the
+    VJP discards the lse cotangent, so without the stop the zeros would
+    be an undocumented accident), while the out gradient stays intact."""
+    q, k, v = _qkv(jax.random.key(14), 1, 16, 16, 4, 2, 16, 16)
+
+    def both(q):
+        out, lse = flash_attention(q, k, v, block_q=8, block_k=8,
+                                   interpret=True, return_lse=True)
+        return out, lse
+
+    g_lse = jax.grad(lambda q: both(q)[1].sum())(q)
+    np.testing.assert_array_equal(np.asarray(g_lse), 0.0)
+    g_out = jax.grad(lambda q: both(q)[0].sum())(q)
+    assert float(jnp.max(jnp.abs(g_out))) > 0.0
+
+
+def test_serve_engine_greedy_unchanged_under_flash():
+    """Engine greedy outputs are impl-independent and the compile-once
+    guard holds with the flash decode/prefill kernels in the jit."""
+    from repro.serve import Engine, SamplingParams
+    cfg = get_smoke_config("llama3.2-1b").with_overrides(remat=False,
+                                                         dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab_size, size=n).tolist()
+               for n in (5, 9, 3)]
+
+    def run(attn_impl):
+        eng = Engine(model, params, max_slots=2, max_seq=32,
+                     prefill_chunk=8, attn_impl=attn_impl)
+        rids = [eng.submit(p, 5, SamplingParams()) for p in prompts]
+        res = eng.run()
+        return [res[r] for r in rids], eng.trace_counts
+
+    ref, _ = run("ref")
+    fl, tc = run("flash")
+    assert ref == fl
+    assert tc["decode"] == 1 and tc["prefill"] == 1
+
+
+# ---------------------------------------------------------------------------
+# memory guarantees
+# ---------------------------------------------------------------------------
+
+def _sxs_vars(jaxpr, S, dtype=None):
+    """f32 (or ``dtype``) variables shaped (..., S, S) anywhere in a jaxpr."""
+    hits = []
+
+    def walk(jpr):
+        for eqn in jpr.eqns:
+            for var in eqn.outvars:
+                aval = getattr(var, "aval", None)
+                if aval is None or len(aval.shape) < 2:
+                    continue
+                if tuple(aval.shape[-2:]) == (S, S) and (
+                        dtype is None and aval.dtype == jnp.float32
+                        or aval.dtype == dtype):
+                    hits.append(aval)
+            for sub in eqn.params.values():
+                if hasattr(sub, "jaxpr"):
+                    walk(sub.jaxpr)
+                elif isinstance(sub, (list, tuple)):
+                    for s in sub:
+                        if hasattr(s, "jaxpr"):
+                            walk(s.jaxpr)
+    walk(jaxpr.jaxpr)
+    return hits
+
+
+def test_dense_softmax_no_fp32_score_chain():
+    """Peak-memory regression (satellite fix): the dense ref path must not
+    run the softmax chain over an fp32 copy of the (S, S) scores. At most
+    one fp32 (S,S) value may appear — the convert feeding the fp32
+    row-sum reduction, which fuses into the reduce and never allocates."""
+    B, S, H, KV, hd = 2, 64, 4, 2, 16
+    a = AttentionConfig(num_heads=H, num_kv_heads=KV, head_dim=hd)
+    keep = causal_window_mask(jnp.arange(S), jnp.arange(S), 0)
+    q = jnp.zeros((B, S, H, hd), jnp.bfloat16)
+    k = jnp.zeros((B, S, KV, hd), jnp.bfloat16)
+    jpr = jax.make_jaxpr(lambda q, k, v: gqa_attend(q, k, v, keep, a))(
+        q, k, k)
+    assert len(_sxs_vars(jpr, S)) <= 1, (
+        f"dense path materializes fp32 (S,S) chain: {_sxs_vars(jpr, S)}")
+
+    # the old upcast-everything softmax trips the same counter (the test
+    # would have caught the regression it pins)
+    def old_attend(q, k, v):
+        G = H // KV
+        qg = q.reshape(B, S, KV, G, hd)
+        s = jnp.einsum("bskgh,btkh->bkgst", qg, k)
+        s = jnp.where(keep[None, None, None], s, -1e30)
+        w = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(v.dtype)
+        return jnp.einsum("bkgst,btkh->bskgh", w, v)
+
+    jpr_old = jax.make_jaxpr(old_attend)(q, k, k)
+    assert len(_sxs_vars(jpr_old, S)) >= 3
+
+
+def test_flash_train_step_has_no_sxs_allocation():
+    """Acceptance: fwd+bwd through the flash kernel compiles with no
+    (S, S)-shaped tensor of any dtype in the optimized HLO."""
+    import re
+    B, S, H, KV, hd = 1, 128, 4, 2, 16
+    q, k, v = _qkv(jax.random.key(12), B, S, S, H, KV, hd, hd,
+                   jnp.bfloat16)
+
+    def step(q, k, v):
+        # grad wrt all three so the dq AND dkv kernels are in the HLO
+        return jax.grad(lambda q, k, v: flash_attention(
+            q, k, v, block_q=32, block_k=32,
+            interpret=True).astype(jnp.float32).sum(),
+            argnums=(0, 1, 2))(q, k, v)
+
+    txt = jax.jit(step).lower(q, k, v).compile().as_text()
+    assert not re.findall(rf"\[(?:\d+,)*{S},{S}\]", txt)
+
+    def dense(q, k, v):
+        keep = causal_window_mask(jnp.arange(S), jnp.arange(S), 0)
+        a = AttentionConfig(num_heads=H, num_kv_heads=KV, head_dim=hd)
+        return jax.grad(lambda q: gqa_attend(q, k, v, keep, a).astype(
+            jnp.float32).sum())(q)
+
+    txt_dense = jax.jit(dense).lower(q, k, v).compile().as_text()
+    assert re.findall(rf"\[(?:\d+,)*{S},{S}\]", txt_dense)  # test bites
+
+
+# ---------------------------------------------------------------------------
+# dispatch knob + roofline model
+# ---------------------------------------------------------------------------
+
+def test_resolve_attn_impl_env_and_config(monkeypatch):
+    a = AttentionConfig(num_heads=4, num_kv_heads=2, head_dim=16)
+    monkeypatch.delenv("REPRO_ATTN_IMPL", raising=False)
+    # backend default on this CPU container: interpret mode -> ref
+    assert resolve_attn_impl(a) == "ref"
+    assert resolve_attn_impl(None) == "ref"
+    # config knob
+    assert resolve_attn_impl(
+        dataclasses.replace(a, attn_impl="flash")) == "flash"
+    # env wins over config
+    monkeypatch.setenv("REPRO_ATTN_IMPL", "blockwise")
+    assert resolve_attn_impl(
+        dataclasses.replace(a, attn_impl="flash")) == "blockwise"
+    monkeypatch.setenv("REPRO_ATTN_IMPL", "nope")
+    with pytest.raises(ValueError):
+        resolve_attn_impl(a)
+
+
+def test_attention_roofline_windowed_flops():
+    from repro.roofline.analysis import attention_flops_bytes
+    full = attention_flops_bytes(batch=1, q_len=1024, kv_len=1024, heads=4,
+                                 kv_heads=2, head_dim_k=64)
+    assert full["pairs"] == 1024 * 1025 // 2          # causal triangle
+    win = attention_flops_bytes(batch=1, q_len=1024, kv_len=1024, heads=4,
+                                kv_heads=2, head_dim_k=64, window=128)
+    # windowed compute is linear in S: 128*1024 - 128*127/2
+    assert win["pairs"] == 128 * 1024 - 128 * 127 // 2
+    assert win["flops"] < full["flops"] / 3
+    chunk = attention_flops_bytes(batch=1, q_len=32, kv_len=256, heads=4,
+                                  kv_heads=2, head_dim_k=64, q_start=224)
+    assert chunk["pairs"] == sum(min(225 + i, 256) for i in range(32))
+    fb = attention_flops_bytes(batch=1, q_len=256, kv_len=256, heads=4,
+                               kv_heads=2, head_dim_k=64, kind="fwd+bwd")
+    fwd = attention_flops_bytes(batch=1, q_len=256, kv_len=256, heads=4,
+                                kv_heads=2, head_dim_k=64)
+    assert fb["flops"] > 2 * fwd["flops"] and fb["hbm_bytes"] > \
+        fwd["hbm_bytes"]
