@@ -102,6 +102,17 @@ def run(quick: bool = False):
     rows.append((f"serve/prefill/{arch}", st.prefill_time
                  / max(st.prefill_tokens, 1) * 1e6,
                  f"tok_s={st.prefill_tok_s():.1f};chunk={chunk}"))
+
+    # request-level latency: submit -> first token (continuous mode queues
+    # everything at once, so TTFT here is dominated by queue wait — the
+    # depth-of-queue picture a static batcher can't see per request)
+    ttft = st.ttft_percentiles()
+    qw = st.queue_wait_percentiles()
+    rows.append((f"serve/ttft/{arch}", ttft[50] * 1e6,
+                 f"p50_ms={ttft[50] * 1e3:.2f};p99_ms={ttft[99] * 1e3:.2f};"
+                 f"queue_p50_ms={qw[50] * 1e3:.2f};"
+                 f"queue_p99_ms={qw[99] * 1e3:.2f};"
+                 f"admitted={st.admissions};evicted={st.evictions}"))
     return rows
 
 

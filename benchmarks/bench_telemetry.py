@@ -1,0 +1,143 @@
+"""Telemetry overhead benchmark — pins the <1% step-time contract.
+
+The per-step instrumentation pattern the train loop uses (1 span, 2
+histogram observes, 3 counter incs) is timed precisely over many
+thousands of calls, in enabled mode and in the ``REPRO_TELEMETRY=0``
+no-op mode, and divided by a measured real step time (a jitted device
+dispatch + sync). That ratio is the honest per-step delta:
+
+- telemetry/overhead_on  : instr_cost / step_time, **asserted < 1%** —
+  the acceptance contract for default-on telemetry
+- telemetry/overhead_off : same for the no-op fast path, asserted < 1%
+- telemetry/per_op       : ns per counter-inc / histogram-observe / span
+  in enabled mode (the raw instrument costs, for budgeting new sites)
+- telemetry/loop_delta   : the end-to-end cross-check — instrumented vs
+  bare step loops, min-of-reps. Informational: at few-ms CPU step times
+  the run-to-run noise floor exceeds the ~6us instrumentation signal,
+  so this row reports the measured delta rather than asserting on it.
+
+The step is a real device dispatch + sync so the ratio is against
+genuine step time, not an empty loop; min-of-reps suppresses scheduler
+noise.
+"""
+import time
+
+
+def _time_calls(fn, arg, m):
+    t0 = time.perf_counter()
+    for _ in range(m):
+        fn(arg)
+    return (time.perf_counter() - t0) / m
+
+
+def _loop(step_fn, x, n, instrument):
+    """Time n dispatch+sync steps, calling ``instrument(dt)`` per step."""
+    import jax
+    t0 = time.perf_counter()
+    for _ in range(n):
+        t_i = time.perf_counter()
+        x = step_fn(x)
+        jax.block_until_ready(x)
+        instrument(time.perf_counter() - t_i)
+    return time.perf_counter() - t0, x
+
+
+def run(quick: bool = False):
+    import jax
+    import jax.numpy as jnp
+
+    from repro import telemetry
+    from repro.telemetry import metrics, trace
+
+    n = 60 if quick else 200
+    reps = 3 if quick else 5
+    m = 10_000 if quick else 50_000
+    d = 512
+
+    @jax.jit
+    def step(x):
+        return jnp.tanh(x @ x) * 0.5 + x * 0.5
+
+    x0 = jnp.ones((d, d), jnp.float32) / d
+    jax.block_until_ready(step(x0))      # compile outside the clock
+
+    def bare_instr(dt):
+        pass
+
+    def full_instr(dt):
+        # the per-step pattern train/loop.py uses
+        with trace.span("bench/step"):
+            pass
+        metrics.histogram("bench/step_time_s").observe(dt)
+        metrics.histogram("bench/data_time_s").observe(dt)
+        metrics.counter("bench/steps").inc()
+        metrics.counter("bench/examples").inc(16)
+        metrics.counter("bench/bytes").inc(1 << 20)
+
+    was_enabled = telemetry.enabled()
+    try:
+        # -- the contract: measured instr cost vs measured step time -------
+        step_s = min(_loop(step, x0, n, bare_instr)[0] / n
+                     for _ in range(reps))
+        telemetry.set_enabled(True)
+        instr_on_s = min(_time_calls(full_instr, 0.003, m)
+                         for _ in range(reps))
+        telemetry.set_enabled(False)
+        instr_off_s = min(_time_calls(full_instr, 0.003, m)
+                          for _ in range(reps))
+        on_pct = instr_on_s / step_s * 100.0
+        off_pct = instr_off_s / step_s * 100.0
+
+        # -- end-to-end cross-check: instrumented vs bare loops ------------
+        telemetry.set_enabled(True)
+        loop_on = min(_loop(step, x0, n, full_instr)[0] for _ in range(reps))
+        loop_bare = min(_loop(step, x0, n, bare_instr)[0]
+                        for _ in range(reps))
+        loop_delta_pct = (loop_on - loop_bare) / loop_bare * 100.0
+
+        # -- raw per-op costs ----------------------------------------------
+        reg = telemetry.Registry()
+        c = reg.counter("bench/per_op")
+        h = reg.histogram("bench/per_op_h")
+        t0 = time.perf_counter()
+        for _ in range(m):
+            c.inc()
+        inc_ns = (time.perf_counter() - t0) / m * 1e9
+        t0 = time.perf_counter()
+        for _ in range(m):
+            h.observe(0.001)
+        obs_ns = (time.perf_counter() - t0) / m * 1e9
+        t0 = time.perf_counter()
+        for _ in range(m // 10):
+            with trace.span("bench/op"):
+                pass
+        span_ns = (time.perf_counter() - t0) / (m // 10) * 1e9
+        trace.reset()
+    finally:
+        telemetry.set_enabled(was_enabled)
+
+    rows = [
+        ("telemetry/overhead_on", instr_on_s * 1e6,
+         f"overhead_pct={on_pct:.3f};step_us={step_s * 1e6:.1f};"
+         f"instr_us={instr_on_s * 1e6:.2f}"),
+        ("telemetry/overhead_off", instr_off_s * 1e6,
+         f"overhead_pct={off_pct:.3f};instr_us={instr_off_s * 1e6:.2f}"),
+        ("telemetry/loop_delta", loop_on / n * 1e6,
+         f"delta_pct={loop_delta_pct:.2f};n={n};informational=1"),
+        ("telemetry/per_op", 0.0,
+         f"counter_inc_ns={inc_ns:.0f};hist_observe_ns={obs_ns:.0f};"
+         f"span_ns={span_ns:.0f}"),
+    ]
+    # the acceptance contract: default-on telemetry costs < 1% of step
+    # time, and the no-op path is free (noise floor)
+    assert on_pct < 1.0, \
+        f"enabled telemetry overhead {on_pct:.2f}% >= 1% of step time"
+    assert off_pct < 1.0, \
+        f"no-op telemetry overhead {off_pct:.2f}% >= 1% of step time"
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    for name, us, derived in run(quick="--quick" in sys.argv):
+        print(f"{name},{us:.1f},{derived}")

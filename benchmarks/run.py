@@ -17,6 +17,9 @@ Prints ``name,us_per_call,derived`` CSV:
 - bench_attention-> flash (Pallas) vs XLA-einsum vs blockwise attention at
                     S in {512, 2048, 8192}: fwd / fwd+bwd tok/s, peak
                     workspace, achieved-vs-roofline, no-(S,S)-in-HLO guard
+- bench_telemetry-> instrumentation overhead on a hot step loop: enabled
+                    vs REPRO_TELEMETRY=0 no-op path (asserts the <1%
+                    step-time contract), per-op costs
 
 ``--quick`` runs the CI smoke subset (bench_comm + bench_overlap +
 bench_easgd + bench_serve + bench_attention at reduced scale); ``--json
@@ -52,21 +55,31 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as JSON (perf-trajectory "
                          "artifact)")
+    ap.add_argument("--metrics-out", default=None, metavar="JSONL",
+                    help="dump telemetry metrics recorded during the "
+                         "benches (incl. the serve engines' registries) "
+                         "as schema'd JSONL")
+    ap.add_argument("--trace-out", default=None, metavar="JSON",
+                    help="export host-side spans from the benches as "
+                         "Chrome-trace/Perfetto JSON")
     args = ap.parse_args()
 
     from benchmarks import (bench_attention, bench_comm, bench_dist,
                             bench_easgd, bench_kernels, bench_loading,
-                            bench_overlap, bench_scaling, bench_serve)
+                            bench_overlap, bench_scaling, bench_serve,
+                            bench_telemetry)
     if args.quick:
         modules = [("comm", bench_comm), ("overlap", bench_overlap),
                    ("easgd", bench_easgd), ("serve", bench_serve),
-                   ("attention", bench_attention)]
+                   ("attention", bench_attention),
+                   ("telemetry", bench_telemetry)]
     else:
         modules = [("comm", bench_comm), ("overlap", bench_overlap),
                    ("scaling", bench_scaling), ("easgd", bench_easgd),
                    ("loading", bench_loading), ("kernels", bench_kernels),
                    ("dist", bench_dist), ("serve", bench_serve),
-                   ("attention", bench_attention)]
+                   ("attention", bench_attention),
+                   ("telemetry", bench_telemetry)]
     print("name,us_per_call,derived")
     failed, rows = [], []
     for name, mod in modules:
@@ -84,8 +97,20 @@ def main() -> None:
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
     if args.json:
+        # same schema + run context as live-run telemetry (--metrics-out):
+        # every BENCH_*.json is attributable to a host/device/backend and
+        # comparable across PRs (validated by repro.telemetry.validate)
+        from repro.telemetry.schema import SCHEMA_VERSION, run_context
         with open(args.json, "w") as f:
-            json.dump({"quick": args.quick, "rows": rows}, f, indent=1)
+            json.dump({"schema_version": SCHEMA_VERSION,
+                       "run": run_context(),
+                       "quick": args.quick, "rows": rows}, f, indent=1)
+    if args.metrics_out:
+        from repro import telemetry
+        telemetry.dump_metrics(args.metrics_out)
+    if args.trace_out:
+        from repro import telemetry
+        telemetry.trace.export(args.trace_out)
     if failed:
         sys.exit(1)
 

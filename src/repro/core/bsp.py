@@ -119,7 +119,8 @@ def make_bsp_step(model: Model, optimizer: Optimizer, exchanger: Exchanger,
                   scheme: str = "subgd", sum_fn=default_chunk_sum,
                   unroll: bool = False, microbatches: int = 1,
                   bucket_bytes: int = 0, sharded_update: bool = False,
-                  overlap: str | None = None, fuse_rs_update=None):
+                  overlap: str | None = None, fuse_rs_update=None,
+                  grad_norm: bool = False):
     """Returns ``step(state, batch, rng) -> (state, metrics)`` (un-jitted).
 
     ``microbatches`` > 1 splits the local batch and accumulates gradients
@@ -136,7 +137,13 @@ def make_bsp_step(model: Model, optimizer: Optimizer, exchanger: Exchanger,
     dequant+sum+update kernel on the raw alltoall receives (needs a
     single-axis asa-family strategy and an optimizer with
     ``rs_fused_update``; None = auto: on when kernels run compiled — TPU —
-    off in interpreter mode where the jnp flat update is faster)."""
+    off in interpreter mode where the jnp flat update is faster).
+
+    ``grad_norm=True`` adds the post-exchange global gradient norm to the
+    step metrics — the telemetry layer's single *in-graph* opt-in (it adds
+    reductions to the compiled step, so it is off by default and gated by
+    ``REPRO_TELEMETRY_GRADNORM``; non-sharded paths only, where the full
+    reduced gradient exists to be normed)."""
     if overlap not in (None, "buckets"):
         raise ValueError(f"unknown overlap mode {overlap!r}")
     if overlap:
@@ -198,6 +205,14 @@ def make_bsp_step(model: Model, optimizer: Optimizer, exchanger: Exchanger,
             else:
                 raise ValueError(f"unknown scheme {scheme!r}")
             metrics = jax.tree.map(lambda v: jax.lax.pmean(v, axes), metrics)
+            if grad_norm:
+                # subgd: grads here are the post-exchange global mean
+                # (identical on every rank); awagd: the local gradient —
+                # the pmean reports the worker average
+                sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads))
+                metrics["grad_norm"] = jnp.sqrt(
+                    jax.lax.pmean(sq, axes))
             new_state = {"params": new_params, "opt": new_opt,
                          "step": state["step"] + 1}
             return new_state, metrics

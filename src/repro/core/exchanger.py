@@ -456,6 +456,80 @@ def get_exchanger(name: str) -> Exchanger:
     return EXCHANGERS[name]
 
 
+def _dtype_bytes(dtype) -> int:
+    return 4 if dtype is None else jnp.dtype(dtype).itemsize
+
+
+def wire_summary(exchanger: Exchanger, plan: RSPlan, *,
+                 param_ag: bool = False, sync_every: int = 1) -> dict:
+    """Analytic per-rank bytes-on-wire for one full exchange over ``plan``.
+
+    Host-side accounting for telemetry: the collectives themselves run
+    inside jitted programs where no host code can observe them, so the
+    train loop instead increments ``exchange/bytes_wire`` by this static
+    per-step figure (the same modeling discipline as
+    ``roofline.analysis.parse_collectives``, but from the plan rather than
+    the HLO). Per rank, egress:
+
+    - ``asa``/``ring`` RS: ``(k-1) * shard_len`` elements at the transfer
+      dtype per bucket (alltoall / k-1 ppermute hops), int8 adds the
+      per-row fp32 scales;
+    - AG: the ``shard_len`` shard to each of the other ``k-1`` ranks — at
+      the transfer dtype, or :func:`param_wire_dtype` when the gather
+      carries updated *parameters* (``param_ag=True``, the RS->update->AG
+      path);
+    - ``ar``: the classic fused-allreduce volume ``2 (k-1)/k`` of the
+      bucket at fp32;
+    - small (psum'd) leaves: ``2 (k-1)/k`` of the leaf at fp32.
+
+    ``sync_every`` > 1 (easgd/asgd tau) scales ``bytes_per_step`` down:
+    the traffic only moves on averaging steps."""
+    k = plan.k
+    g_sz = _dtype_bytes(exchanger.transfer_dtype)
+    ag_dtype = (param_wire_dtype(exchanger) if param_ag
+                else exchanger.transfer_dtype)
+    a_sz = _dtype_bytes(ag_dtype)
+    int8_rs = exchanger.transfer_dtype == jnp.int8
+    int8_ag = ag_dtype == jnp.int8
+    rs_b = ag_b = 0
+    per_bucket = []
+    for b in plan.buckets:
+        if exchanger.kind == "none":
+            rs, ag = 0, 0
+        elif exchanger.kind == "ar":
+            half = int(2 * (k - 1) / k * b.padded * 4 / 2)
+            rs, ag = half, half
+        else:
+            rs = (k - 1) * b.shard_len * g_sz
+            if int8_rs:
+                rs += (k - 1) * 4            # per-row fp32 scales
+            ag = (k - 1) * b.shard_len * a_sz
+            if int8_ag:
+                ag += (k - 1) * 4            # one fp32 scale per shard
+        rs_b += rs
+        ag_b += ag
+        per_bucket.append({"leaves": len(b.leaves), "padded": b.padded,
+                           "rs_bytes": rs, "ag_bytes": ag})
+    small_b = 0 if exchanger.kind == "none" else sum(
+        int(2 * (k - 1) / k * np.prod(plan.shapes[i] or (1,)) * 4)
+        for i in plan.small)
+    total = rs_b + ag_b + small_b
+    return {
+        "strategy": exchanger.name,
+        "wire_dtype": str(jnp.dtype(exchanger.transfer_dtype or jnp.float32)),
+        "ag_dtype": str(jnp.dtype(ag_dtype or jnp.float32)),
+        "k": k,
+        "num_buckets": plan.num_buckets,
+        "rs_bytes": rs_b,
+        "ag_bytes": ag_b,
+        "small_bytes": small_b,
+        "bytes_per_exchange": total,
+        "sync_every": sync_every,
+        "bytes_per_step": total / max(sync_every, 1),
+        "per_bucket": per_bucket,
+    }
+
+
 def param_wire_dtype(exchanger: Exchanger):
     """Wire format for the updated-parameter all-gather leg of the
     RS->update->AG path: the strategy's transfer dtype, except int8

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.configs import get_smoke_config, get_config
 from repro.configs.base import with_attn_impl
 from repro.models import build_model
@@ -56,6 +57,13 @@ def main():
     ap.add_argument("--reference", action="store_true",
                     help="static-batch greedy generate() instead of the "
                          "engine")
+    ap.add_argument("--metrics-out", default=None, metavar="JSONL",
+                    help="write telemetry metrics (schema'd JSONL: "
+                         "prefill/decode throughput, TTFT, queue wait, "
+                         "slot occupancy, admission/eviction counters)")
+    ap.add_argument("--trace-out", default=None, metavar="JSON",
+                    help="write host-side spans (per-request lifecycle + "
+                         "decode dispatches) as Chrome-trace/Perfetto JSON")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -96,14 +104,25 @@ def main():
     dt = time.perf_counter() - t0
     st = eng.stats
     lat = st.token_latency_percentiles()
+    ttft = st.ttft_percentiles()
+    qw = st.queue_wait_percentiles()
     print(f"served {len(rids)} requests / {st.decoded_tokens} tokens "
           f"in {dt:.2f}s on {args.max_slots} slots "
           f"(prefill {st.prefill_tok_s():.1f} tok/s, "
           f"decode {st.decode_tok_s():.1f} tok/s, "
           f"p50/p99 token latency {lat[50] * 1e3:.1f}/{lat[99] * 1e3:.1f} ms)")
+    print(f"ttft p50/p99 {ttft[50] * 1e3:.1f}/{ttft[99] * 1e3:.1f} ms "
+          f"(queue wait p50/p99 {qw[50] * 1e3:.1f}/{qw[99] * 1e3:.1f} ms, "
+          f"{st.admissions} admitted / {st.evictions} evicted)")
     print(f"decode compiled {eng.trace_counts['decode']}x across "
           f"{st.steps} steps")
     print("sample:", results[rids[0]][:16])
+    if args.metrics_out:
+        telemetry.dump_metrics(args.metrics_out)
+        print(f"metrics -> {args.metrics_out}")
+    if args.trace_out:
+        telemetry.trace.export(args.trace_out)
+        print(f"trace -> {args.trace_out}")
 
 
 if __name__ == "__main__":

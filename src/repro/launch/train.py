@@ -23,6 +23,7 @@ import argparse
 import jax
 import numpy as np
 
+from repro import telemetry
 from repro.configs import get_config, get_smoke_config
 from repro.configs.base import with_attn_impl
 from repro.data.synthetic import LMTokenSource, ImageSource
@@ -98,7 +99,17 @@ def main():
     ap.add_argument("--resume", default=None, metavar="CKPT",
                     help="restore state/step/rng offset from a checkpoint "
                          "written by the same plan and continue")
+    ap.add_argument("--metrics-out", default=None, metavar="JSONL",
+                    help="write telemetry metrics (schema'd JSONL: "
+                         "per-step time split, loss/lr, examples/s, "
+                         "achieved model FLOP/s, exchange bytes-on-wire)")
+    ap.add_argument("--trace-out", default=None, metavar="JSON",
+                    help="write host-side spans as Chrome-trace/Perfetto "
+                         "JSON (load at ui.perfetto.dev)")
     args = ap.parse_args()
+
+    if args.metrics_out:
+        telemetry.configure(metrics_out=args.metrics_out)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     cfg = with_attn_impl(cfg, args.attn_impl)
@@ -126,6 +137,13 @@ def main():
         if args.resume and "mismatch" in str(e):
             raise SystemExit(f"--resume {args.resume}: {e}")
         raise
+    if args.metrics_out:
+        # the JSONL sink attached above received periodic + final
+        # snapshots from the train loop's flush boundaries
+        print(f"metrics -> {args.metrics_out}")
+    if args.trace_out:
+        telemetry.trace.export(args.trace_out)
+        print(f"trace -> {args.trace_out}")
     if not report.losses:
         if args.resume:
             print(f"done: nothing to do (resumed at step {report.steps})")
@@ -133,7 +151,9 @@ def main():
             print("done: no steps ran (empty batch source or --steps 0)")
         return
     print(f"done: {report.steps} steps ({plan.algo}), "
-          f"{report.examples_per_s:.1f} ex/s, "
+          f"{report.examples_per_s:.1f} ex/s total "
+          f"({report.steady_examples_per_s:.1f} ex/s steady-state, "
+          f"compile+first step {report.compile_time:.2f}s), "
           f"loss {report.losses[0]:.4f} -> {report.losses[-1]:.4f}")
 
 

@@ -21,7 +21,7 @@ def step_decay(lr0: float, steps_per_drop: int, factor: float = 0.1):
 
 def poly_decay(lr0: float, max_steps: int, power: float = 0.5):
     def f(step):
-        frac = jnp.clip(step.astype(jnp.float32) / max_steps, 0.0, 1.0)
+        frac = jnp.clip(jnp.asarray(step, jnp.float32) / max_steps, 0.0, 1.0)
         return jnp.asarray(lr0, jnp.float32) * (1.0 - frac) ** power
     return f
 
@@ -29,7 +29,7 @@ def poly_decay(lr0: float, max_steps: int, power: float = 0.5):
 def warmup_cosine(lr0: float, warmup: int, max_steps: int,
                   min_frac: float = 0.1):
     def f(step):
-        s = step.astype(jnp.float32)
+        s = jnp.asarray(step, jnp.float32)
         wu = jnp.minimum(s / jnp.maximum(warmup, 1), 1.0)
         prog = jnp.clip((s - warmup) / jnp.maximum(max_steps - warmup, 1),
                         0.0, 1.0)

@@ -37,12 +37,14 @@ from __future__ import annotations
 
 import time
 from collections import deque
-from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
+from repro.telemetry import trace
+from repro.telemetry.registry import Registry
 from repro.serve import cache as cache_mod
 from repro.serve import sampling as sampling_mod
 from repro.serve.scheduler import Request, SamplingParams, SlotScheduler
@@ -51,19 +53,101 @@ from repro.serve.scheduler import Request, SamplingParams, SlotScheduler
 STATS_WINDOW = 4096   # decode steps of latency history kept for percentiles
 
 
-@dataclass
 class EngineStats:
-    prefill_tokens: int = 0
-    prefill_time: float = 0.0
-    decoded_tokens: int = 0
-    decode_time: float = 0.0
-    steps: int = 0
-    # bounded windows (a long-running server must not grow per step):
-    # seconds per dispatch / live tokens per dispatch
-    step_times: deque = field(
-        default_factory=lambda: deque(maxlen=STATS_WINDOW))
-    step_tokens: deque = field(
-        default_factory=lambda: deque(maxlen=STATS_WINDOW))
+    """Serve statistics, backed by a telemetry :class:`Registry`.
+
+    The public surface (``prefill_tokens``, ``decode_tok_s()``,
+    ``token_latency_percentiles()``, ...) is unchanged from the old
+    dataclass, but every scalar now lives in a registry metric
+    (``serve/...`` counters/gauges/histograms) owned by this object — so
+    a ``--metrics-out`` dump exports exactly the numbers the stats report,
+    with no second bookkeeping path. The registry is private and always
+    live (the stats must work with ``REPRO_TELEMETRY=0``); when telemetry
+    is enabled the engine attaches it to the process-wide export stream.
+
+    Exact (non-bucketed) p50/p99 readbacks keep the bounded deque windows
+    the old implementation used; the registry histograms carry the same
+    observations for the JSONL view.
+    """
+
+    def __init__(self):
+        r = self.registry = Registry(label="serve")
+        self._prefill_tokens = r.counter("serve/prefill_tokens")
+        self._prefill_time = r.counter("serve/prefill_time_s")
+        self._decoded_tokens = r.counter("serve/decoded_tokens")
+        self._decode_time = r.counter("serve/decode_time_s")
+        self._steps = r.counter("serve/decode_steps")
+        self._admissions = r.counter("serve/admissions")
+        self._evictions = r.counter("serve/evictions")
+        self._occupancy = r.gauge("serve/slot_occupancy")
+        self._h_step = r.histogram("serve/step_time_s")
+        self._h_ttft = r.histogram("serve/ttft_s")
+        self._h_queue = r.histogram("serve/queue_wait_s")
+        # bounded windows (a long-running server must not grow per step):
+        # seconds per dispatch / live tokens per dispatch / per-request
+        self.step_times: deque = deque(maxlen=STATS_WINDOW)
+        self.step_tokens: deque = deque(maxlen=STATS_WINDOW)
+        self.ttfts: deque = deque(maxlen=STATS_WINDOW)
+        self.queue_waits: deque = deque(maxlen=STATS_WINDOW)
+
+    # -- the recording path (engine-internal) -------------------------------
+
+    def record_prefill(self, tokens: int, dt: float) -> None:
+        self._prefill_tokens.inc(tokens)
+        self._prefill_time.inc(dt)
+
+    def record_admission(self, queue_wait: float) -> None:
+        self._admissions.inc()
+        self._h_queue.observe(queue_wait)
+        self.queue_waits.append(queue_wait)
+
+    def record_first_token(self, ttft: float) -> None:
+        self._h_ttft.observe(ttft)
+        self.ttfts.append(ttft)
+
+    def record_decode(self, n_active: int, dt: float) -> None:
+        self._steps.inc()
+        self._decode_time.inc(dt)
+        self._decoded_tokens.inc(n_active)
+        self._h_step.observe(dt)
+        self.step_times.append(dt)
+        self.step_tokens.append(n_active)
+
+    def record_evictions(self, n: int) -> None:
+        self._evictions.inc(n)
+
+    def set_occupancy(self, n: int) -> None:
+        self._occupancy.set(n)
+
+    # -- the read surface (public, unchanged + TTFT/queue-wait) -------------
+
+    @property
+    def prefill_tokens(self) -> int:
+        return self._prefill_tokens.value
+
+    @property
+    def prefill_time(self) -> float:
+        return self._prefill_time.value
+
+    @property
+    def decoded_tokens(self) -> int:
+        return self._decoded_tokens.value
+
+    @property
+    def decode_time(self) -> float:
+        return self._decode_time.value
+
+    @property
+    def steps(self) -> int:
+        return self._steps.value
+
+    @property
+    def admissions(self) -> int:
+        return self._admissions.value
+
+    @property
+    def evictions(self) -> int:
+        return self._evictions.value
 
     def prefill_tok_s(self) -> float:
         return self.prefill_tokens / max(self.prefill_time, 1e-9)
@@ -79,6 +163,20 @@ class EngineStats:
         lats = np.repeat(np.fromiter(self.step_times, np.float64),
                          np.fromiter(self.step_tokens, np.int64))
         return {q: float(np.percentile(lats, q)) for q in qs}
+
+    def ttft_percentiles(self, qs=(50, 99)) -> dict:
+        """Submit -> first-token latency (queue wait + prefill) over the
+        most recent requests."""
+        if not self.ttfts:
+            return {q: 0.0 for q in qs}
+        arr = np.fromiter(self.ttfts, np.float64)
+        return {q: float(np.percentile(arr, q)) for q in qs}
+
+    def queue_wait_percentiles(self, qs=(50, 99)) -> dict:
+        if not self.queue_waits:
+            return {q: 0.0 for q in qs}
+        arr = np.fromiter(self.queue_waits, np.float64)
+        return {q: float(np.percentile(arr, q)) for q in qs}
 
 
 class Engine:
@@ -128,6 +226,9 @@ class Engine:
             mesh, cache_mod.make_pool(model, max_slots, max_seq), max_slots)
         self.sched = SlotScheduler(max_slots, max_seq)
         self.stats = EngineStats()
+        self._finished_seen = 0      # eviction accounting watermark
+        if telemetry.enabled():
+            telemetry.attach_registry(self.stats.registry)
 
         # per-slot sampling state (host mirrors; uploaded per dispatch)
         self._temps = np.zeros((max_slots,), np.float32)
@@ -225,54 +326,66 @@ class Engine:
         toks = np.asarray(req.tokens, np.int32)
         S0, C = len(req.tokens), self.prefill_chunk
         t0 = time.perf_counter()
-        # zero the lane: SSM state/conv carry across prefill chunks by
-        # design, so a previous occupant's state must not leak in (causal
-        # masking already hides stale attention rows; zeroing them too is
-        # free here)
-        self.pool = cache_mod.reset_slot(self.pool, jnp.int32(slot))
-        logits = None
-        for c in range(0, S0, C):
-            sl = toks[c:c + C]
-            valid = len(sl)
-            if valid < C:
-                sl = np.pad(sl, (0, C - valid))
-            self.pool, logits = self._prefill(
-                self.params, self.pool, jnp.asarray(sl[None]),
-                jnp.int32(slot), jnp.int32(c), jnp.int32(valid))
-        tok, k_next = self._sample_prefill(
-            logits, jnp.int32(valid), jnp.float32(req.sampling.temperature),
-            jnp.int32(req.sampling.top_k), jnp.float32(req.sampling.top_p),
-            self._keys[slot])
-        tok = int(tok)
+        with trace.span("serve/prefill", slot=slot, rid=req.rid, tokens=S0):
+            # zero the lane: SSM state/conv carry across prefill chunks by
+            # design, so a previous occupant's state must not leak in
+            # (causal masking already hides stale attention rows; zeroing
+            # them too is free here)
+            self.pool = cache_mod.reset_slot(self.pool, jnp.int32(slot))
+            logits = None
+            for c in range(0, S0, C):
+                sl = toks[c:c + C]
+                valid = len(sl)
+                if valid < C:
+                    sl = np.pad(sl, (0, C - valid))
+                self.pool, logits = self._prefill(
+                    self.params, self.pool, jnp.asarray(sl[None]),
+                    jnp.int32(slot), jnp.int32(c), jnp.int32(valid))
+            tok, k_next = self._sample_prefill(
+                logits, jnp.int32(valid),
+                jnp.float32(req.sampling.temperature),
+                jnp.int32(req.sampling.top_k),
+                jnp.float32(req.sampling.top_p),
+                self._keys[slot])
+            tok = int(tok)
         self._keys = self._keys.at[slot].set(k_next)
-        self.stats.prefill_time += time.perf_counter() - t0
-        self.stats.prefill_tokens += S0
+        self.stats.record_prefill(S0, time.perf_counter() - t0)
         self.sched.record_first_token(slot, tok)
+        self.stats.record_first_token(req.ttft)
+
+    def _account_finished(self) -> None:
+        """Fold newly finished requests into the eviction counter (a finish
+        frees — evicts — its slot mid-flight)."""
+        n = len(self.sched.finished)
+        if n > self._finished_seen:
+            self.stats.record_evictions(n - self._finished_seen)
+            self._finished_seen = n
 
     def step(self) -> int:
         """Admit + prefill new requests, run one decode dispatch over the
         pool. Returns the number of live tokens produced."""
         for slot, req in self.sched.admit():
+            self.stats.record_admission(req.queue_wait)
             self._prefill_request(slot, req)
+        self._account_finished()       # max_new=1/eos at first token
         n_active = self.sched.num_active
+        self.stats.set_occupancy(n_active)
         if n_active == 0:
             return 0
         tokens = jnp.asarray(self.sched.feed_tokens(),
                              jnp.int32)[:, None]
         pos = jnp.asarray(self.sched.positions(), jnp.int32)
         t0 = time.perf_counter()
-        self.pool, tok, self._keys = self._decode(
-            self.params, self.pool, tokens, pos,
-            jnp.asarray(self._temps), jnp.asarray(self._top_ks),
-            jnp.asarray(self._top_ps), self._keys)
-        tok = np.asarray(tok)                         # sync point
+        with trace.span("serve/decode_step", active=n_active):
+            self.pool, tok, self._keys = self._decode(
+                self.params, self.pool, tokens, pos,
+                jnp.asarray(self._temps), jnp.asarray(self._top_ks),
+                jnp.asarray(self._top_ps), self._keys)
+            tok = np.asarray(tok)                     # sync point
         dt = time.perf_counter() - t0
         self.sched.record_step(tok)
-        self.stats.steps += 1
-        self.stats.decode_time += dt
-        self.stats.decoded_tokens += n_active
-        self.stats.step_times.append(dt)
-        self.stats.step_tokens.append(n_active)
+        self._account_finished()
+        self.stats.record_decode(n_active, dt)
         return n_active
 
     def run(self) -> dict:
@@ -284,4 +397,7 @@ class Engine:
     def reset_stats(self) -> None:
         """Zero the timing stats (post-warmup). ``trace_counts`` is *not*
         reset: compile-once is a property of the engine's lifetime."""
+        telemetry.detach_registry(self.stats.registry)
         self.stats = EngineStats()
+        if telemetry.enabled():
+            telemetry.attach_registry(self.stats.registry)

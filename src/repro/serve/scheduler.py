@@ -9,12 +9,23 @@ device arrays, the scheduler owns the request lifecycle —
 A slot is a lane of the engine's fixed-size batch. Freed slots are reused
 immediately by the next queued request; the decode step's shapes never
 change, only the per-slot position/active vectors the scheduler exports.
+
+The scheduler also stamps the request lifecycle for telemetry: a request
+carries ``t_submit``/``t_admit``/``t_prefill_done``/``t_finish``
+(``time.perf_counter`` seconds), and each phase is exported as an async
+span (``serve/req/queued`` -> ``serve/req/prefill`` ->
+``serve/req/decode``, keyed by request id) so a ``--trace-out`` Perfetto
+file shows every request's queue wait, TTFT and decode tail overlapping
+the engine's dispatch spans. All host-side; still no jax here.
 """
 from __future__ import annotations
 
 import itertools
+import time
 from collections import deque
 from dataclasses import dataclass, field
+
+from repro.telemetry import trace
 
 
 @dataclass(frozen=True)
@@ -37,6 +48,21 @@ class Request:
     sampling: SamplingParams = field(default_factory=SamplingParams)
     eos: int | None = None     # stop token (None: run to max_new)
     rid: int = -1              # assigned by the scheduler at submit
+    # lifecycle timestamps (perf_counter seconds; 0.0 = not reached yet)
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    t_prefill_done: float = 0.0    # first token sampled: TTFT endpoint
+    t_finish: float = 0.0
+
+    @property
+    def queue_wait(self) -> float:
+        return self.t_admit - self.t_submit if self.t_admit else 0.0
+
+    @property
+    def ttft(self) -> float:
+        """Submit -> first token (queue wait + prefill + first sample)."""
+        return (self.t_prefill_done - self.t_submit
+                if self.t_prefill_done else 0.0)
 
 
 @dataclass
@@ -72,6 +98,9 @@ class SlotScheduler:
                 f"request needs {len(req.tokens) + req.max_new} cache rows, "
                 f"pool holds {self.max_seq}")
         req.rid = next(self._rid)
+        req.t_submit = time.perf_counter()
+        trace.async_begin("serve/req/queued", req.rid,
+                          prompt=len(req.tokens), max_new=req.max_new)
         self.pending.append(req)
         return req.rid
 
@@ -88,6 +117,9 @@ class SlotScheduler:
             if not self.pending:
                 break
             req = self.pending.popleft()
+            req.t_admit = time.perf_counter()
+            trace.async_end("serve/req/queued", req.rid)
+            trace.async_begin("serve/req/prefill", req.rid, slot=slot)
             self.slots[slot] = SlotState(req=req, pos=len(req.tokens),
                                          last_token=req.tokens[-1])
             placed.append((slot, req))
@@ -115,6 +147,10 @@ class SlotScheduler:
 
     def record_first_token(self, slot: int, token: int) -> None:
         """The prompt's continuation sampled from the prefill logits."""
+        st = self.slots[slot]
+        st.req.t_prefill_done = time.perf_counter()
+        trace.async_end("serve/req/prefill", st.req.rid)
+        trace.async_begin("serve/req/decode", st.req.rid, slot=slot)
         self._record(slot, token)
 
     def record_step(self, tokens) -> list[int]:
@@ -138,6 +174,9 @@ class SlotScheduler:
         if (len(st.generated) >= req.max_new
                 or (req.eos is not None and token == req.eos)):
             st.done = True
+            req.t_finish = time.perf_counter()
+            trace.async_end("serve/req/decode", req.rid,
+                            tokens=len(st.generated))
             self.finished[req.rid] = st
             self.slots[slot] = None    # evict mid-flight; slot reusable
 

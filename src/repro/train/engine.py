@@ -38,7 +38,8 @@ import jax
 from repro.core.bsp import (init_sharded_train_state, init_train_state,
                             make_bsp_step)
 from repro.core.easgd import init_async_state, make_async_step
-from repro.core.exchanger import default_chunk_sum, get_exchanger
+from repro.core.exchanger import (default_chunk_sum, get_exchanger,
+                                  make_rs_plan, wire_summary)
 from repro.core.gspmd import fsdp_state_shardings, make_gspmd_step
 from repro.dist.sharding import batch_shardings
 from repro.models.registry import Model
@@ -147,15 +148,42 @@ class Engine:
     plan: TrainPlan
     init_state: Callable[[Any], Any]
     step: Callable[..., Any]
+    # analytic per-rank wire traffic (``exchanger.wire_summary``) for
+    # telemetry — None when the plan has no explicit exchanger (gspmd
+    # lowers its own collectives) or no exchange at all ('none')
+    wire: dict | None = None
 
     def state_shardings(self, state):
         return jax.tree.map(lambda l: getattr(l, "sharding", None), state)
+
+
+def _plan_wire(plan: TrainPlan, model: Model, mesh) -> dict | None:
+    """Static bytes-on-wire accounting for the plan's exchange traffic."""
+    if plan.algo == "gspmd" or plan.exchanger == "none":
+        return None
+    ex = get_exchanger(plan.exchanger)
+    params_abs = jax.eval_shape(model.init, jax.random.key(0))
+    k = int(mesh.shape[plan.data_axes[-1]])
+    rsplan = make_rs_plan(params_abs, k, plan.bucket_bytes)
+    if plan.algo == "bsp":
+        per_exchange = plan.microbatches if plan.overlap else 1
+        ws = wire_summary(ex, rsplan,
+                          param_ag=bool(plan.sharded_update or plan.overlap))
+        # overlapped buckets exchange every microbatch's gradient (m× wire
+        # volume hidden behind backprop) — count what actually moves
+        ws["bytes_per_step"] = (ws["rs_bytes"] * per_exchange
+                                + ws["ag_bytes"] + ws["small_bytes"])
+        return ws
+    # easgd/asgd: delta RS + updated-center AG every tau-th step
+    return wire_summary(ex, rsplan, sync_every=plan.tau)
 
 
 def build_engine(plan: TrainPlan, model: Model, optimizer: Optimizer,
                  lr_fn: Callable, mesh, *, sum_fn=None) -> Engine:
     """Resolve ``plan`` to ``(init_state, step, state_shardings)``."""
     sum_fn = sum_fn or default_chunk_sum
+
+    from repro import telemetry
 
     if plan.algo == "bsp":
         ex = get_exchanger(plan.exchanger)
@@ -164,7 +192,8 @@ def build_engine(plan: TrainPlan, model: Model, optimizer: Optimizer,
             model, optimizer, ex, lr_fn, mesh, data_axes=plan.data_axes,
             scheme=plan.scheme, sum_fn=sum_fn,
             microbatches=plan.microbatches, bucket_bytes=plan.bucket_bytes,
-            sharded_update=plan.sharded_update, overlap=plan.overlap))
+            sharded_update=plan.sharded_update, overlap=plan.overlap,
+            grad_norm=telemetry.config().grad_norm))
 
         def step(state, batch, rng, step_idx: int = 0):
             del step_idx
@@ -177,7 +206,7 @@ def build_engine(plan: TrainPlan, model: Model, optimizer: Optimizer,
                     bucket_bytes=plan.bucket_bytes)
             return init_train_state(model, optimizer, key)
 
-        return Engine(plan, init_state, step)
+        return Engine(plan, init_state, step, _plan_wire(plan, model, mesh))
 
     if plan.is_async:
         ex = get_exchanger(plan.exchanger)
@@ -198,7 +227,7 @@ def build_engine(plan: TrainPlan, model: Model, optimizer: Optimizer,
             return init_async_state(model, optimizer, key, k, mesh=mesh,
                                     data_axes=plan.data_axes)
 
-        return Engine(plan, init_state, step)
+        return Engine(plan, init_state, step, _plan_wire(plan, model, mesh))
 
     # gspmd
     abs_state = jax.eval_shape(

@@ -15,17 +15,45 @@ skip pays the loader's cost for the discarded batches — cheap for the
 synthetic/index-keyed sources here, where producing batch i is O(1); a
 loader with expensive staging should defer device transfer until a batch
 is actually consumed so the skip stays metadata-only.
+
+Telemetry (host-side only — no op is added to the jitted step):
+
+- spans ``train/data`` / ``train/step`` / ``train/flush`` per step, so a
+  ``--trace-out`` Perfetto file shows where host wall time goes. Steps
+  dispatch asynchronously: ``train/step`` times *dispatch*; queued device
+  work surfaces in the ``train/flush`` span at log boundaries and in the
+  loop-iteration histogram.
+- histograms ``train/data_time_s`` / ``train/step_time_s`` (loop
+  iteration, first step excluded — that one is compile) and counters
+  ``train/steps`` / ``train/examples`` / ``train/tokens`` /
+  ``exchange/bytes_wire`` (the engine's analytic per-step wire traffic).
+- gauges at flush boundaries only (one device sync per window, never per
+  step): ``train/loss``, ``train/lr``, ``train/examples_per_s``,
+  ``train/model_flops_s`` (6·N·D achieved, cross-referenced from
+  ``roofline.analysis.model_flops_6nd``), ``train/mfu`` when
+  ``REPRO_PEAK_FLOPS`` names the device peak, ``train/grad_norm`` when
+  the opt-in is on, and ``train/device_mem_bytes`` when the backend
+  exposes ``memory_stats()``.
+
+The first step's wall time (compile + first execution) is recorded as
+``TrainReport.compile_time`` and excluded from
+``TrainReport.steady_examples_per_s`` — ``examples_per_s`` keeps the
+total-wall-clock meaning it always had.
 """
 from __future__ import annotations
 
+import os
 import time
 from dataclasses import dataclass, field
 
 import jax
 
+from repro import telemetry
 from repro.checkpoint.ckpt import restore_for_resume, save_checkpoint
 from repro.models.registry import Model
 from repro.optim.optimizers import Optimizer
+from repro.roofline.analysis import model_flops_6nd
+from repro.telemetry import metrics, trace
 from repro.train.engine import TrainPlan, build_engine
 
 # when logging is off, losses still move to host in bounded windows (a long
@@ -39,6 +67,38 @@ class TrainReport:
     losses: list = field(default_factory=list)
     wall_time: float = 0.0
     examples_per_s: float = 0.0
+    # first-step wall time (compile + first execution) and the rate with
+    # that step excluded — the honest steady-state throughput
+    compile_time: float = 0.0
+    steady_examples_per_s: float = 0.0
+
+
+def _count_params(model: Model) -> int:
+    import numpy as np
+    abs_p = jax.eval_shape(model.init, jax.random.key(0))
+    return int(sum(int(np.prod(l.shape)) if l.shape else 1
+                   for l in jax.tree.leaves(abs_p)))
+
+
+def _batch_counts(batch) -> tuple[int, int]:
+    """(examples, tokens) in one global batch. Token-shaped leading leaf
+    (B, S) counts B*S tokens; image/label-only batches count examples."""
+    first = jax.tree.leaves(batch)[0]
+    b = int(first.shape[0])
+    toks = batch.get("tokens") if isinstance(batch, dict) else None
+    if toks is not None and len(toks.shape) >= 2:
+        return b, int(toks.shape[0]) * int(toks.shape[1])
+    return b, b
+
+
+def _device_mem_bytes():
+    try:
+        stats = jax.local_devices()[0].memory_stats()
+    except Exception:  # noqa: BLE001 — backend without memory introspection
+        return None
+    if not stats:
+        return None
+    return stats.get("bytes_in_use")
 
 
 def train(model: Model, optimizer: Optimizer, lr_fn, mesh, batches, *,
@@ -78,9 +138,34 @@ def train(model: Model, optimizer: Optimizer, lr_fn, mesh, batches, *,
                                                expect_algo=plan.algo)
     rng = jax.random.key(seed + 1)
 
+    # -- telemetry handles (all no-ops when REPRO_TELEMETRY=0) --------------
+    c_steps = metrics.counter("train/steps")
+    c_examples = metrics.counter("train/examples")
+    c_tokens = metrics.counter("train/tokens")
+    h_data = metrics.histogram("train/data_time_s")
+    h_step = metrics.histogram("train/step_time_s")
+    h_flush = metrics.histogram("train/flush_time_s")
+    g_loss = metrics.gauge("train/loss")
+    g_lr = metrics.gauge("train/lr")
+    g_exps = metrics.gauge("train/examples_per_s")
+    g_flops = metrics.gauge("train/model_flops_s")
+    metrics.info("train/plan", algo=plan.algo, exchanger=plan.exchanger,
+                 scheme=plan.scheme, arch=getattr(model.cfg, "name", ""))
+    wire = engine.wire
+    c_wire = metrics.counter("exchange/bytes_wire")
+    if wire:
+        metrics.info("exchange/config",
+                     **{k: wire[k] for k in ("strategy", "wire_dtype",
+                                             "ag_dtype", "k", "num_buckets",
+                                             "sync_every")})
+        metrics.gauge("exchange/bytes_per_step").set(wire["bytes_per_step"])
+    n_params = _count_params(model)
+    peak_flops = float(os.environ.get("REPRO_PEAK_FLOPS", "0") or 0)
+
     report = TrainReport()
     report.steps = start_step
     n_examples = 0
+    n_tokens = 0
     t0 = time.perf_counter()
     it = iter(batches)
     try:
@@ -93,32 +178,88 @@ def train(model: Model, optimizer: Optimizer, lr_fn, mesh, batches, *,
     # _FLUSH_CAP when logging is off) so the buffer stays bounded.
     flush_every = min(log_every, _FLUSH_CAP) if log_every else _FLUSH_CAP
     device_losses = []
+    device_grad_norm = None
     saved_at = None
+    t_steady0 = t0
+    steady_base_ex = steady_base_tok = 0
     for i in range(start_step, num_steps):
-        try:
-            batch = next(it)
-        except StopIteration:
-            break
-        state, metrics = engine.step(state, batch,
-                                     jax.random.fold_in(rng, i), step_idx=i)
-        device_losses.append(metrics["loss"])
-        first = jax.tree.leaves(batch)[0]
-        n_examples += int(first.shape[0])
+        t_iter0 = time.perf_counter()
+        with trace.span("train/data"):
+            try:
+                batch = next(it)
+            except StopIteration:
+                break
+        t_step0 = time.perf_counter()
+        with trace.span("train/step", step=i):
+            state, step_metrics = engine.step(
+                state, batch, jax.random.fold_in(rng, i), step_idx=i)
+        device_losses.append(step_metrics["loss"])
+        device_grad_norm = step_metrics.get("grad_norm")
+        b_ex, b_tok = _batch_counts(batch)
+        n_examples += b_ex
+        n_tokens += b_tok
+        first_step = i == start_step
+        if first_step:
+            # the first step carries compilation: block so its cost lands
+            # here (one extra sync for the whole run) and keep it out of
+            # the steady-state histograms/rates
+            with trace.span("train/compile_block"):
+                jax.block_until_ready(device_losses[-1])
+            report.compile_time = time.perf_counter() - t_step0
+            t_steady0 = time.perf_counter()
+            steady_base_ex, steady_base_tok = n_examples, n_tokens
+        c_steps.inc()
+        c_examples.inc(b_ex)
+        c_tokens.inc(b_tok)
+        if wire:
+            c_wire.inc(wire["bytes_per_step"])
+        h_data.observe(t_step0 - t_iter0)
+        if not first_step:
+            h_step.observe(time.perf_counter() - t_iter0)
         if log_every and (i % log_every == 0 or i == num_steps - 1):
-            print_fn(f"step {i:5d}  loss {float(device_losses[-1]):.4f}")
+            with trace.span("train/flush", step=i):
+                t_f = time.perf_counter()
+                loss = float(device_losses[-1])       # device sync
+                h_flush.observe(time.perf_counter() - t_f)
+            print_fn(f"step {i:5d}  loss {loss:.4f}")
+            g_loss.set(loss)
+            g_lr.set(float(lr_fn(i)))
+            if device_grad_norm is not None:
+                metrics.gauge("train/grad_norm").set(
+                    float(device_grad_norm))
+            steady_t = time.perf_counter() - t_steady0
+            if steady_t > 0 and n_examples > steady_base_ex:
+                g_exps.set((n_examples - steady_base_ex) / steady_t)
+                flops_s = model_flops_6nd(
+                    n_params, n_tokens - steady_base_tok, "train") / steady_t
+                g_flops.set(flops_s)
+                if peak_flops > 0:
+                    metrics.gauge("train/mfu").set(flops_s / peak_flops)
+            mem = _device_mem_bytes()
+            if mem is not None:
+                metrics.gauge("train/device_mem_bytes").set(mem)
+            telemetry.flush(force=False)
         if len(device_losses) >= flush_every:
             report.losses.extend(float(l) for l in device_losses)
             device_losses.clear()
         if ckpt_path and ckpt_every and (i + 1) % ckpt_every == 0:
-            save_checkpoint(ckpt_path, state, step=i + 1, algo=plan.algo)
+            with trace.span("train/checkpoint", step=i + 1):
+                save_checkpoint(ckpt_path, state, step=i + 1,
+                                algo=plan.algo)
             saved_at = i + 1
         report.steps = i + 1
-    jax.block_until_ready(state)
+    with trace.span("train/final_block"):
+        jax.block_until_ready(state)
     report.wall_time = time.perf_counter() - t0
     report.losses.extend(float(l) for l in device_losses)
     report.examples_per_s = n_examples / max(report.wall_time, 1e-9)
+    steady_t = time.perf_counter() - t_steady0
+    if n_examples > steady_base_ex and steady_t > 0:
+        report.steady_examples_per_s = ((n_examples - steady_base_ex)
+                                        / steady_t)
     if ckpt_path and report.steps != saved_at:
         # the in-loop save already covered the final step when ckpt_every
         # divides it — don't write the same step twice
         save_checkpoint(ckpt_path, state, step=report.steps, algo=plan.algo)
+    telemetry.flush(force=True)
     return state, report
