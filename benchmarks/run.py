@@ -65,9 +65,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_attention, bench_comm, bench_dist,
-                            bench_easgd, bench_kernels, bench_loading,
-                            bench_overlap, bench_scaling, bench_serve,
-                            bench_telemetry)
+                            bench_easgd, bench_fault, bench_kernels,
+                            bench_loading, bench_overlap, bench_scaling,
+                            bench_serve, bench_telemetry)
     if args.quick:
         modules = [("comm", bench_comm), ("overlap", bench_overlap),
                    ("easgd", bench_easgd), ("serve", bench_serve),
@@ -79,7 +79,8 @@ def main() -> None:
                    ("loading", bench_loading), ("kernels", bench_kernels),
                    ("dist", bench_dist), ("serve", bench_serve),
                    ("attention", bench_attention),
-                   ("telemetry", bench_telemetry)]
+                   ("telemetry", bench_telemetry),
+                   ("fault", bench_fault)]
     print("name,us_per_call,derived")
     failed, rows = [], []
     for name, mod in modules:

@@ -1,13 +1,38 @@
-"""Checkpointing: pytree <-> sharded .npz directory.
+"""Checkpointing: pytree <-> sharded .npz directory, crash-safe.
 
 Flat key = '/'-joined tree path. Restore rebuilds onto the target sharding
 (device_put against the existing state's shardings), so checkpoints travel
 across mesh configurations.
+
+Crash-safety contract (the preemption-safe-resume substrate — see
+DESIGN.md "Fault tolerance & elasticity"):
+
+- every save writes ``state-<step>.npz`` + ``meta-<step>.json`` through a
+  temp file + atomic ``os.replace`` in the same directory, so a kill at
+  any instant leaves either the old file or the new file, never a torn
+  one; ``meta.json`` (the latest pointer, written last) carries a crc32
+  ``checksum`` of the exact bytes on disk;
+- restore verifies the checksum and, when the latest checkpoint is
+  truncated/corrupt/missing, **falls back to the newest valid step**
+  (with a warning + the ``fault/ckpt_fallbacks`` counter) instead of
+  crashing mid-restore;
+- the newest ``keep`` steps are retained (older state files pruned), so
+  a fallback target exists even after the latest save was interrupted;
+- the pre-crash-safe single-file layout (``state.npz`` + ``meta.json``
+  without a checksum) still restores.
+
+``workers`` in the meta records the elastic membership that wrote the
+checkpoint (``repro.fault.elastic`` resumes onto that fleet and re-forms
+membership from there).
 """
 from __future__ import annotations
 
+import io
 import json
 import os
+import tempfile
+import warnings
+import zlib
 
 import jax
 import numpy as np
@@ -30,27 +55,157 @@ def _flatten(tree):
     return flat
 
 
+def _atomic_write(path: str, data: bytes):
+    """Write-to-temp + fsync + rename in the target directory: readers see
+    the old bytes or the new bytes, never a torn file."""
+    d = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=".tmp-",
+                               suffix=os.path.basename(path))
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def _state_name(step: int) -> str:
+    return f"state-{step:08d}.npz"
+
+
+def _meta_name(step: int) -> str:
+    return f"meta-{step:08d}.json"
+
+
 def save_checkpoint(path: str, state, step: int | None = None,
-                    algo: str | None = None):
+                    algo: str | None = None, workers=None, keep: int = 3):
+    """Crash-safe save of ``state`` at ``step`` into directory ``path``.
+
+    Writes ``state-<step>.npz`` and its per-step meta atomically, then the
+    ``meta.json`` latest pointer; retains the newest ``keep`` steps."""
     os.makedirs(path, exist_ok=True)
     flat = _flatten(state)
 
     def to_np(v):
-        a = np.asarray(v) if not hasattr(v, "dtype") or v.dtype !=             jax.numpy.bfloat16 else np.asarray(v, np.float32)
-        return a
+        # npz has no bfloat16: store as fp32, restore casts back
+        if hasattr(v, "dtype") and v.dtype == jax.numpy.bfloat16:
+            return np.asarray(v, np.float32)
+        return np.asarray(v)
+
     arrays = {k: to_np(v) for k, v in flat.items()}
-    np.savez(os.path.join(path, "state.npz"), **arrays)
-    meta = {"step": int(step) if step is not None else 0,
-            "keys": sorted(arrays.keys())}
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    data = buf.getvalue()
+    step_i = int(step) if step is not None else 0
+    meta = {"step": step_i, "keys": sorted(arrays.keys()),
+            "file": _state_name(step_i),
+            "checksum": zlib.crc32(data), "nbytes": len(data)}
     if algo is not None:
         meta["algo"] = algo
-    with open(os.path.join(path, "meta.json"), "w") as f:
-        json.dump(meta, f)
+    if workers is not None:
+        meta["workers"] = [int(w) for w in workers]
+    meta_bytes = json.dumps(meta).encode()
+    _atomic_write(os.path.join(path, _state_name(step_i)), data)
+    _atomic_write(os.path.join(path, _meta_name(step_i)), meta_bytes)
+    # latest pointer last: a crash before this line leaves the previous
+    # latest intact and the new step discoverable by the fallback scan
+    _atomic_write(os.path.join(path, "meta.json"), meta_bytes)
+    if keep and keep > 0:
+        for s in _saved_steps(path)[:-keep]:
+            for name in (_state_name(s), _meta_name(s)):
+                try:
+                    os.unlink(os.path.join(path, name))
+                except OSError:
+                    pass
+
+
+def _saved_steps(path: str) -> list:
+    """Steps with a per-step meta present, ascending."""
+    steps = []
+    try:
+        names = os.listdir(path)
+    except OSError:
+        return steps
+    for n in names:
+        if n.startswith("meta-") and n.endswith(".json"):
+            try:
+                steps.append(int(n[len("meta-"):-len(".json")]))
+            except ValueError:
+                pass
+    return sorted(steps)
+
+
+def _verify(path: str, meta: dict):
+    """-> npz bytes if the recorded file exists and its crc32 matches,
+    else None (truncated / corrupt / missing)."""
+    fn = meta.get("file")
+    if not fn:
+        return None
+    try:
+        with open(os.path.join(path, fn), "rb") as f:
+            data = f.read()
+    except OSError:
+        return None
+    if "checksum" in meta and zlib.crc32(data) != meta["checksum"]:
+        return None
+    if "nbytes" in meta and len(data) != meta["nbytes"]:
+        return None
+    return data
+
+
+def _load_valid(path: str) -> tuple:
+    """-> (npz NpzFile, meta) of the newest checkpoint that passes its
+    integrity check, falling back step by step; legacy single-file
+    layouts (no checksum) load as-is."""
+    tried = []
+    for s in reversed(_saved_steps(path)):
+        try:
+            with open(os.path.join(path, _meta_name(s))) as f:
+                meta = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            tried.append(s)
+            continue
+        data = _verify(path, meta)
+        if data is None:
+            tried.append(s)
+            continue
+        if tried:
+            warnings.warn(
+                f"checkpoint {path!r}: step(s) {tried} truncated or "
+                f"corrupt; falling back to newest valid step {s}",
+                RuntimeWarning, stacklevel=3)
+            from repro.telemetry import metrics
+            metrics.counter("fault/ckpt_fallbacks").inc(len(tried))
+        return np.load(io.BytesIO(data), allow_pickle=False), meta
+    # legacy layout: one state.npz + meta.json, no integrity stamp
+    legacy = os.path.join(path, "state.npz")
+    if os.path.exists(legacy):
+        meta_p = os.path.join(path, "meta.json")
+        meta = {}
+        if os.path.exists(meta_p):
+            with open(meta_p) as f:
+                meta = json.load(f)
+        return np.load(legacy), meta
+    raise FileNotFoundError(
+        f"no valid checkpoint under {path!r}"
+        + (f" (step(s) {tried} failed their integrity check)" if tried
+           else ""))
 
 
 def restore_checkpoint(path: str, state_like):
-    """Restore into the structure (and shardings/dtypes) of ``state_like``."""
-    data = np.load(os.path.join(path, "state.npz"))
+    """Restore into the structure (and shardings/dtypes) of ``state_like``
+    from the newest *valid* checkpoint under ``path``."""
+    data, _ = _load_valid(path)
+    return _restore_tree(data, state_like)
+
+
+def _restore_tree(data, state_like):
     flat_like = _flatten(state_like)
     missing = set(flat_like) - set(data.files)
     extra = set(data.files) - set(flat_like)
@@ -89,8 +244,10 @@ def restore_checkpoint(path: str, state_like):
 
 
 def load_meta(path: str) -> dict:
-    with open(os.path.join(path, "meta.json")) as f:
-        return json.load(f)
+    """Meta of the newest *valid* checkpoint (integrity-verified; falls
+    back past truncated/corrupt steps like the restore path does)."""
+    _, meta = _load_valid(path)
+    return meta
 
 
 def latest_step(path: str) -> int:
@@ -110,15 +267,20 @@ def restore_for_resume(path: str, state_like, expect_algo: str | None = None):
     ``start_step`` comes from the checkpoint meta and is cross-checked
     against the restored ``state["step"]`` counter — the loop folds the rng
     with the global step index, so a wrong offset would silently change
-    the data/rng schedule instead of replaying the uninterrupted run."""
-    meta = load_meta(path)
+    the data/rng schedule instead of replaying the uninterrupted run.
+
+    A truncated/corrupt latest checkpoint (a save interrupted by the very
+    preemption being resumed from) falls back to the newest valid step —
+    the data and the returned ``start_step`` always come from the *same*
+    verified checkpoint."""
+    data, meta = _load_valid(path)
     recorded = meta.get("algo")
     if (expect_algo is not None and recorded is not None
             and recorded != expect_algo):
         raise ValueError(
             f"checkpoint algo mismatch: {path!r} was written by a "
             f"{recorded!r} plan, cannot resume as {expect_algo!r}")
-    state = restore_checkpoint(path, state_like)
+    state = _restore_tree(data, state_like)
     step = int(meta.get("step", 0))
     if isinstance(state, dict) and "step" in state:
         in_state = int(np.asarray(state["step"]))

@@ -81,13 +81,29 @@ def make_async_step(model: Model, optimizer: Optimizer, exchanger: Exchanger,
                     lr_fn: Callable, mesh, *, algo: str = "easgd",
                     alpha: float = 0.5, data_axes=("data",),
                     sum_fn=default_chunk_sum, bucket_bytes: int = 0,
-                    unroll: bool = False):
+                    unroll: bool = False, quorum: bool = False):
     """Returns ``(local_step, sync_step)``, both un-jitted.
 
     Each is ``step(state, batch, rng) -> (state, metrics)``. ``local_step``
     is the pure per-worker descent (no param-sized collective);
     ``sync_step`` additionally runs the elastic exchange. The engine
-    dispatches ``sync_step`` on every tau-th step."""
+    dispatches ``sync_step`` on every tau-th step.
+
+    With ``quorum=True`` the sync step instead takes per-worker weight
+    vectors — ``sync(state, batch, rng, absorb, attract)`` with ``absorb``
+    and ``attract`` of shape (k,) fp32, sharded like the replica stacks —
+    the elastic-fleet variant (see ``repro.fault``):
+
+        c'   = c + sum_i absorb_i * (x_i - c)
+        x_i' = x_i - attract_i * (x_i - c')
+
+    ``absorb_i = alpha / (1 + staleness_i)`` for reporting workers (the
+    staleness-scaled late-absorption rule) and 0 for non-reporting rows,
+    whose params ignore the center this round. alpha is folded into the
+    weights by the membership controller, so full participation at
+    staleness 0 (``absorb = attract = alpha``) reproduces the fixed sync
+    step exactly; ``attract_i == 1`` snaps to the center (the asgd
+    re-fetch, special-cased against fp rounding)."""
     if algo not in ("easgd", "asgd"):
         raise ValueError(f"unknown async algo {algo!r}")
     if exchanger.kind == "none":
@@ -151,14 +167,99 @@ def make_async_step(model: Model, optimizer: Optimizer, exchanger: Exchanger,
                                ).astype(wi.dtype), w, c_new)
         return restack(w_new, opt, c_new, state["step"] + 1), metrics
 
+    def per_shard_sync_quorum(state, batch, rng, absorb, attract):
+        w, opt, metrics = local_update(state, batch, rng)
+        k = 1
+        for ax in axes:
+            k *= jax.lax.axis_size(ax)
+        wa = absorb[0].astype(jnp.float32)    # this worker's absorb weight
+        at = attract[0].astype(jnp.float32)
+        # weighted delta: alpha (staleness-scaled) is already folded into
+        # wa, so the center update is c + sum_i wa_i * delta_i
+        delta = jax.tree.map(
+            lambda wi, c: wa * (wi.astype(jnp.float32)
+                                - c.astype(jnp.float32)),
+            w, state["center"])
+        dmean = exchanger.exchange(delta, entry, sum_fn=sum_fn,
+                                   bucket_bytes=bucket_bytes)
+        c_new = jax.tree.map(
+            lambda c, d: (c.astype(jnp.float32) + k * d).astype(c.dtype),
+            state["center"], dmean)
+        # attract==1 must snap exactly (w - (w - c) would round); non-
+        # reporting rows (attract==0) keep their params bit-identical
+        w_new = jax.tree.map(
+            lambda wi, c: jnp.where(
+                at == 1.0, c.astype(wi.dtype),
+                jnp.where(at == 0.0, wi,
+                          (wi.astype(jnp.float32)
+                           - at * (wi.astype(jnp.float32)
+                                   - c.astype(jnp.float32))
+                           ).astype(wi.dtype))),
+            w, c_new)
+        return restack(w_new, opt, c_new, state["step"] + 1), metrics
+
     state_spec = {"params": P(entry), "opt": P(entry),
                   "center": P(), "step": P()}
 
-    def wrap(fn):
+    def wrap(fn, extra_in=()):
         return jax.shard_map(fn, mesh=mesh,
-                             in_specs=(state_spec, P(axes), P()),
+                             in_specs=(state_spec, P(axes), P(), *extra_in),
                              out_specs=(state_spec, P()),
                              axis_names=frozenset(axes),
                              check_vma=False)
 
+    if quorum:
+        return (wrap(per_shard_local),
+                wrap(per_shard_sync_quorum, extra_in=(P(entry), P(entry))))
     return wrap(per_shard_local), wrap(per_shard_sync)
+
+
+def reshard_async_state(state, old_workers, new_workers,
+                        optimizer: Optimizer, *, mesh,
+                        data_axes=("data",)):
+    """Migrate an async state between memberships (elastic join/leave).
+
+    ``old_workers``/``new_workers`` are ordered worker-id tuples defining
+    the replica-stack row order before and after the change. Survivor rows
+    carry over by id (params *and* optimizer state — a surviving worker
+    keeps its momentum); joiners start at the center with a fresh
+    ``optimizer.init`` row (their delta is zero, their staleness 0).
+    ``center`` and ``step`` pass through unchanged.
+
+    Host-side by design: membership changes happen at round boundaries
+    (rare), and the gather/restack is O(state size) — the same cost class
+    as the checkpoint save that production systems do at the same place.
+    The result lands on ``mesh`` with the canonical async placement
+    (stacks sharded over the data axes, center/step replicated).
+    """
+    import numpy as np
+
+    k_new = len(new_workers)
+    mesh_k = 1
+    for a in data_axes:
+        mesh_k *= int(mesh.shape[a])
+    if k_new != mesh_k:
+        raise ValueError(f"{k_new} workers but the new mesh has {mesh_k} "
+                         f"devices over {data_axes}")
+    old_index = {w: i for i, w in enumerate(old_workers)}
+
+    center_host = jax.tree.map(np.asarray, state["center"])
+    fresh_opt = jax.tree.map(np.asarray,
+                             optimizer.init(state["center"]))
+
+    def rows(stack_leaf, fill_leaf):
+        host = np.asarray(stack_leaf)
+        return np.stack([host[old_index[w]] if w in old_index
+                         else np.asarray(fill_leaf)
+                         for w in new_workers])
+
+    new_params = jax.tree.map(rows, state["params"], center_host)
+    new_opt = jax.tree.map(rows, state["opt"], fresh_opt)
+
+    worker = NamedSharding(mesh, P(norm_axes(tuple(data_axes))))
+    rep = NamedSharding(mesh, P())
+    put = lambda sh: (lambda l: jax.device_put(l, sh))
+    return {"params": jax.tree.map(put(worker), new_params),
+            "opt": jax.tree.map(put(worker), new_opt),
+            "center": jax.tree.map(put(rep), center_host),
+            "step": jax.device_put(np.asarray(state["step"]), rep)}

@@ -38,17 +38,36 @@ def preprocess_images(batch: dict, image_mean, crop: int, rng: np.random.Generat
     return out
 
 
+class LoaderError(RuntimeError):
+    """A ParallelLoader worker-thread failure, re-raised in the consumer."""
+
+
+class _Failure:
+    """Sentinel carrying the worker thread's exception to ``get()``."""
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
 class ParallelLoader:
     """Background loader thread implementing Alg 1's overlap.
 
     load(file) -> preprocess -> device_put, pipelined ``depth`` batches ahead
     of the consumer. ``get()`` blocks only if the loader is behind (i.e.
     loading is slower than one training iteration, the paper's caveat).
+
+    Failure semantics: an exception in the worker thread (missing file,
+    corrupt npz, device_put failure) is propagated to the caller as a
+    :class:`LoaderError` from the next ``get()`` — it never leaves the
+    consumer blocked forever. ``get()`` additionally bounds its wait with
+    ``timeout`` seconds (default 120) and raises ``TimeoutError`` with a
+    diagnosis when the loader thread has silently died or stalled.
     """
 
     def __init__(self, files: list[str], *, image_mean=None, crop: int = 0,
                  depth: int = 2, mode: str = "train", sharding=None,
-                 seed: int = 0, epochs: int = 1, io_delay_ms: float = 0.0):
+                 seed: int = 0, epochs: int = 1, io_delay_ms: float = 0.0,
+                 timeout: float | None = 120.0):
         self.files = files
         self.image_mean = image_mean
         self.crop = crop
@@ -56,6 +75,7 @@ class ParallelLoader:
         self.sharding = sharding
         self.epochs = epochs
         self.io_delay_ms = io_delay_ms  # simulated remote-disk latency (§3.3)
+        self.timeout = timeout
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._ctl: queue.Queue = queue.Queue()
         self._rng = np.random.default_rng(seed)
@@ -64,46 +84,72 @@ class ParallelLoader:
 
     # -- loader state machine (Alg 1) ---------------------------------------
     def _run(self):
-        for _ in range(self.epochs):
-            for path in self.files:
-                # check for a mode/stop message (Alg 1 step 13-17)
-                try:
-                    msg = self._ctl.get_nowait()
-                    if msg == "stop":
-                        self._q.put(None)
-                        return
-                    self.mode = msg
-                except queue.Empty:
-                    pass
-                if self.io_delay_ms:
-                    time.sleep(self.io_delay_ms / 1e3)
-                raw = dict(np.load(path))
-                if "images" in raw and self.image_mean is not None:
-                    raw = preprocess_images(raw, self.image_mean, self.crop,
-                                            self._rng,
-                                            train=(self.mode == "train"))
-                if self.sharding is not None:
-                    dev = {k: jax.device_put(v, self.sharding.get(k))
-                           for k, v in raw.items()}
-                else:
-                    dev = {k: jax.device_put(v) for k, v in raw.items()}
-                # block until the consumer frees a slot (double buffer)
-                self._q.put(dev)
+        try:
+            for _ in range(self.epochs):
+                for path in self.files:
+                    # check for a mode/stop message (Alg 1 step 13-17)
+                    try:
+                        msg = self._ctl.get_nowait()
+                        if msg == "stop":
+                            self._q.put(None)
+                            return
+                        self.mode = msg
+                    except queue.Empty:
+                        pass
+                    if self.io_delay_ms:
+                        time.sleep(self.io_delay_ms / 1e3)
+                    raw = dict(np.load(path))
+                    if "images" in raw and self.image_mean is not None:
+                        raw = preprocess_images(raw, self.image_mean,
+                                                self.crop, self._rng,
+                                                train=(self.mode == "train"))
+                    if self.sharding is not None:
+                        dev = {k: jax.device_put(v, self.sharding.get(k))
+                               for k, v in raw.items()}
+                    else:
+                        dev = {k: jax.device_put(v) for k, v in raw.items()}
+                    # block until the consumer frees a slot (double buffer)
+                    self._q.put(dev)
+        except BaseException as e:  # noqa: BLE001 — must reach the consumer
+            # a raising worker used to die silently and leave get() hanging
+            # on an empty queue forever; hand the exception over instead
+            self._q.put(_Failure(e))
+            return
         self._q.put(None)
 
     # -- consumer API --------------------------------------------------------
     def get(self):
-        """Next ready-on-device batch, or None at end of stream."""
-        return self._q.get()
+        """Next ready-on-device batch, or None at end of stream.
+
+        Raises :class:`LoaderError` if the worker thread failed, and
+        ``TimeoutError`` after ``self.timeout`` seconds without a batch."""
+        try:
+            item = self._q.get(timeout=self.timeout)
+        except queue.Empty:
+            alive = self._thread.is_alive()
+            raise TimeoutError(
+                f"ParallelLoader.get() waited {self.timeout:.0f}s without a "
+                f"batch (loader thread "
+                f"{'stalled' if alive else 'died without reporting'}; "
+                f"{len(self.files)} files, depth={self._q.maxsize})")
+        if isinstance(item, _Failure):
+            # terminal: re-queue so later get()/stop() calls also see it
+            self._q.put(item)
+            raise LoaderError(
+                f"ParallelLoader worker thread failed: "
+                f"{type(item.exc).__name__}: {item.exc}") from item.exc
+        return item
 
     def set_mode(self, mode: str):
         self._ctl.put(mode)
 
     def stop(self):
         self._ctl.put("stop")
-        # drain so the thread can observe the message
+        # drain so the thread can observe the message (None and _Failure
+        # are both terminal)
         try:
-            while self._q.get_nowait() is not None:
+            while not isinstance(self._q.get_nowait(), (type(None),
+                                                        _Failure)):
                 pass
         except queue.Empty:
             pass

@@ -1,0 +1,33 @@
+"""`repro.fault` — elastic fault-tolerant training (the paper's lineage,
+production-grade).
+
+Theano-MPI's whole point was sync+async data parallelism on clusters where
+workers straggle, die, and rejoin (the GroundHog READY/TRAIN/DONE/EXIT
+protocol is the ancestral shape). This package brings that to the unified
+train engine:
+
+- :mod:`repro.fault.membership` — the membership controller: live-worker
+  tracking between tau-step rounds, quorum decisions, staleness
+  accounting, device-slot allocation for joiners.
+- :mod:`repro.fault.inject` — a declarative, seeded :class:`FaultPlan`
+  (kill / join / straggle / drop / corrupt at named steps) so every chaos
+  run is exactly reproducible.
+- :mod:`repro.fault.elastic` — :func:`elastic_train`, the loop that drives
+  the engine's quorum-sync programs, rebuilds jitted programs on
+  membership change, and reshards center + optimizer state onto the
+  surviving mesh.
+- :mod:`repro.fault.smoke` — the chaos-harness CLI the CI ``fault-smoke``
+  job runs (kill + straggle + corrupt schedule, convergence-band assert).
+
+See DESIGN.md "Fault tolerance & elasticity".
+"""
+from repro.fault.inject import (FaultEvent, FaultPlan, bitflip,
+                                payload_checksum)
+from repro.fault.membership import MembershipController, WorkerState
+from repro.fault.elastic import ElasticReport, Preempted, elastic_train
+
+__all__ = [
+    "FaultEvent", "FaultPlan", "bitflip", "payload_checksum",
+    "MembershipController", "WorkerState",
+    "ElasticReport", "Preempted", "elastic_train",
+]

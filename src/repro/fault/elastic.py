@@ -1,0 +1,325 @@
+"""``elastic_train`` — the fault-tolerant async training loop.
+
+Drives the engine's quorum-sync programs (``build_elastic_programs``)
+under a :class:`~repro.fault.membership.MembershipController` and an
+optional seeded :class:`~repro.fault.inject.FaultPlan`:
+
+- every step is a local per-worker descent; every tau-th step is a round
+  boundary where live, non-straggling workers report;
+- the averaging round proceeds iff >= quorum workers report — each
+  reporting delta is absorbed with the staleness-scaled coefficient
+  ``alpha / (1 + staleness)``; below quorum the round degrades to a
+  local step and every delta ages one round;
+- ``corrupt`` injections flip a real bit in the worker's wire payload;
+  the crc32 integrity check detects it and the round excludes that
+  payload (detection is asserted — crc32 catches all single-bit errors);
+- membership changes (kill/join) land at round boundaries: the loop
+  rebuilds its jitted programs for the new k on a mesh of the surviving
+  devices and reshards params/opt rows (survivors keep their momentum,
+  joiners start at the center) — center and step pass through;
+- checkpoints are crash-safe (``checkpoint.ckpt``) and record the
+  membership, so a preempted run resumes onto the checkpoint's fleet and
+  re-forms membership from there.
+
+Determinism contract: with the same seed, batch function, and
+``FaultPlan``, two runs are bit-identical — batches are step-keyed, the
+rng folds the global step, fault events are step-keyed, and everything
+stochastic inside an event draws from a per-event generator. Membership
+soft state (staleness, in-flight straggles) is intentionally *not*
+checkpointed: on resume it re-forms, the same way a real fleet's gossip
+state does; staleness re-accrues within at most one tau window.
+
+Telemetry (through ``repro.telemetry`` — captured by ``--metrics-out``):
+counters ``fault/kills``, ``fault/joins``, ``fault/joins_rejected``,
+``fault/straggles``, ``fault/payloads_dropped``,
+``fault/payloads_corrupt``, ``fault/rounds_synced``,
+``fault/rounds_skipped_quorum``, ``fault/rebuilds``,
+``fault/ckpt_fallbacks``; gauges ``fault/live_workers``,
+``fault/quorum``, ``fault/round_staleness_max``,
+``fault/round_staleness_mean``, ``fault/absorbed_weight_sum``; spans
+``fault/round`` (with membership attrs), ``fault/rebuild``,
+``fault/reshard``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.checkpoint.ckpt import load_meta, restore_for_resume, \
+    save_checkpoint
+from repro.core.easgd import reshard_async_state
+from repro.fault.inject import FaultPlan, bitflip, payload_checksum
+from repro.fault.membership import MembershipController
+from repro.telemetry import metrics, trace
+from repro.train.engine import TrainPlan, build_elastic_programs
+
+
+class Preempted(RuntimeError):
+    """Raised when ``stop_at_step`` preempts the run mid-flight (the
+    whole-process kill the resume property test injects). The partially
+    trained state survives only through checkpoints — exactly like a
+    real preemption."""
+
+    def __init__(self, step: int):
+        super().__init__(f"preempted after step {step}")
+        self.step = step
+
+
+@dataclass
+class ElasticReport:
+    steps: int = 0
+    losses: list = field(default_factory=list)
+    wall_time: float = 0.0
+    rounds: int = 0
+    rounds_synced: int = 0
+    rounds_skipped_quorum: int = 0
+    kills: int = 0
+    joins: int = 0
+    joins_rejected: int = 0
+    straggles: int = 0
+    payloads_dropped: int = 0
+    payloads_corrupt: int = 0
+    rebuilds: int = 0
+    final_workers: tuple = ()
+    # per synced round: (step, reporting ids, absorb weights) — the
+    # audit trail the staleness tests hand-check
+    round_log: list = field(default_factory=list)
+
+
+def _mesh_for(controller: MembershipController, devices):
+    """A data-axis mesh over the live workers' device slots, in stack-row
+    order (worker i's replica row lives on its own device)."""
+    devs = [devices[controller.slot_of(w)] for w in controller.workers]
+    return jax.sharding.Mesh(np.asarray(devs), ("data",))
+
+
+def _first_param_row(state, row: int):
+    """One worker's wire payload proxy: the row of the first params leaf.
+    Used by the corruption check — checksumming the full tree would be
+    exact too, but one leaf suffices to model detect-and-exclude."""
+    leaf = jax.tree.leaves(state["params"])[0]
+    return np.asarray(leaf[row])
+
+
+def elastic_train(model, optimizer, lr_fn, batch_fn, *,
+                  plan: TrainPlan, num_workers: int | None = None,
+                  num_steps: int = 100, seed: int = 0,
+                  fault_plan: FaultPlan | str | None = None,
+                  log_every: int = 10, ckpt_path: str | None = None,
+                  ckpt_every: int = 0, ckpt_keep: int = 3,
+                  resume_from: str | None = None,
+                  stop_at_step: int | None = None,
+                  devices=None, print_fn=print):
+    """Elastic, fault-injected training to ``num_steps``.
+
+    ``batch_fn(step, k) -> batch`` must be deterministic in ``step`` and
+    produce a global batch whose leading dim divides by ``k`` (the live
+    worker count *at that step*) — index-keyed synthetic sources qualify.
+    ``plan`` must be async (easgd/asgd); ``plan.quorum`` (or the majority
+    default) gates averaging rounds. Returns ``(state, ElasticReport)``.
+
+    ``stop_at_step`` simulates whole-process preemption: the loop raises
+    :class:`Preempted` after that step completes, without a final
+    checkpoint — resume with ``resume_from`` pointing at ``ckpt_path``.
+    """
+    if not plan.is_async:
+        raise ValueError(f"elastic_train drives easgd/asgd plans "
+                         f"(algo={plan.algo!r}); bsp/gspmd fault "
+                         f"tolerance is checkpoint restart — use "
+                         f"train() with resume_from")
+    if tuple(plan.data_axes) != ("data",):
+        raise ValueError("elastic membership reshards over a single "
+                         f"'data' axis (got data_axes={plan.data_axes})")
+    if isinstance(fault_plan, str):
+        fault_plan = FaultPlan.from_spec(fault_plan)
+    fault_plan = fault_plan or FaultPlan()
+    devices = list(devices if devices is not None else jax.devices())
+    k0 = num_workers or len(devices)
+    if k0 > len(devices):
+        raise ValueError(
+            f"{k0} workers need {k0} distinct devices but only "
+            f"{len(devices)} are visible — set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={k0} (CPU) or "
+            f"lower --workers")
+
+    # -- membership + (possibly resumed) state ------------------------------
+    start_step = 0
+    if resume_from:
+        meta = load_meta(resume_from)
+        workers = meta.get("workers")
+        if workers is None:
+            workers = list(range(k0))
+        controller = MembershipController(workers, alpha=plan.alpha,
+                                          quorum=plan.quorum,
+                                          num_slots=len(devices))
+    else:
+        controller = MembershipController(range(k0), alpha=plan.alpha,
+                                          quorum=plan.quorum,
+                                          num_slots=len(devices))
+    mesh = _mesh_for(controller, devices)
+    progs = build_elastic_programs(plan, model, optimizer, lr_fn, mesh)
+    state = progs.init_state(jax.random.key(seed))
+    if resume_from:
+        state, start_step = restore_for_resume(resume_from, state,
+                                               expect_algo=plan.algo)
+    rng = jax.random.key(seed + 1)
+
+    # -- telemetry handles --------------------------------------------------
+    c_kills = metrics.counter("fault/kills")
+    c_joins = metrics.counter("fault/joins")
+    c_joins_rej = metrics.counter("fault/joins_rejected")
+    c_straggles = metrics.counter("fault/straggles")
+    c_dropped = metrics.counter("fault/payloads_dropped")
+    c_corrupt = metrics.counter("fault/payloads_corrupt")
+    c_synced = metrics.counter("fault/rounds_synced")
+    c_skipped = metrics.counter("fault/rounds_skipped_quorum")
+    c_rebuilds = metrics.counter("fault/rebuilds")
+    g_live = metrics.gauge("fault/live_workers")
+    g_quorum = metrics.gauge("fault/quorum")
+    g_stale_max = metrics.gauge("fault/round_staleness_max")
+    g_stale_mean = metrics.gauge("fault/round_staleness_mean")
+    g_absorbed = metrics.gauge("fault/absorbed_weight_sum")
+    metrics.info("fault/plan", algo=plan.algo, tau=str(plan.tau),
+                 quorum=str(plan.quorum or "majority"),
+                 fault_spec=fault_plan.to_spec(), workers=str(k0))
+    g_live.set(controller.k)
+    g_quorum.set(controller.quorum_count)
+
+    report = ElasticReport()
+    report.steps = start_step
+    # payload exclusions scoped to the current round
+    round_drops: set = set()
+    round_corrupt: set = set()
+    t0 = time.perf_counter()
+    try:
+        for i in range(start_step, num_steps):
+            batch = batch_fn(i, controller.k)
+            rng_i = jax.random.fold_in(rng, i)
+
+            # -- injected faults scheduled at this step ---------------------
+            for ev in fault_plan.events_at(i):
+                if ev.kind == "kill":
+                    if controller.kill(ev.worker):
+                        report.kills += 1
+                        c_kills.inc()
+                        trace.instant("fault/kill", worker=ev.worker,
+                                      step=i)
+                elif ev.kind == "join":
+                    if controller.request_join(ev.worker):
+                        trace.instant("fault/join_request",
+                                      worker=ev.worker, step=i)
+                elif ev.kind == "straggle":
+                    if controller.straggle(ev.worker, ev.rounds):
+                        report.straggles += 1
+                        c_straggles.inc()
+                elif ev.kind == "drop":
+                    round_drops.add(ev.worker)
+                elif ev.kind == "corrupt":
+                    round_corrupt.add((ev.worker, ev))
+
+            is_round = (i + 1) % plan.tau == 0
+            if not is_round:
+                state, m = progs.local(state, batch, rng_i)
+            else:
+                report.rounds += 1
+                # corrupted payloads: flip a real bit in the worker's wire
+                # payload copy; crc32 must catch it -> exclude like a drop
+                detected = set()
+                for w, ev in round_corrupt:
+                    if w not in controller.workers:
+                        continue
+                    row = controller.workers.index(w)
+                    payload = _first_param_row(state, row)
+                    good = payload_checksum(payload)
+                    bad = bitflip(payload, fault_plan.event_rng(ev))
+                    if payload_checksum(bad) == good:  # pragma: no cover
+                        raise AssertionError(
+                            "crc32 missed a single-bit corruption")
+                    detected.add(w)
+                    report.payloads_corrupt += 1
+                    c_corrupt.inc()
+                dropped = {w for w in round_drops
+                           if w in controller.workers}
+                report.payloads_dropped += len(dropped)
+                c_dropped.inc(len(dropped))
+                reporting = controller.reporting(exclude=dropped | detected)
+                g_stale_max.set(controller.max_staleness())
+                g_stale_mean.set(controller.mean_staleness())
+                if controller.has_quorum(reporting):
+                    absorb, attract = controller.round_weights(reporting)
+                    with trace.span("fault/round", step=i,
+                                    k=controller.k,
+                                    reporting=len(reporting),
+                                    stale_max=controller.max_staleness()):
+                        state, m = progs.sync(state, batch, rng_i,
+                                              absorb, attract)
+                    report.rounds_synced += 1
+                    report.round_log.append(
+                        (i, tuple(reporting), absorb.tolist()))
+                    c_synced.inc()
+                    g_absorbed.set(float(absorb.sum()))
+                    controller.commit_round(reporting)
+                else:
+                    # below quorum: degrade to a local step; deltas age
+                    state, m = progs.local(state, batch, rng_i)
+                    report.rounds_skipped_quorum += 1
+                    c_skipped.inc()
+                    trace.instant("fault/quorum_skip", step=i,
+                                  reporting=len(reporting),
+                                  quorum=controller.quorum_count)
+                    controller.skip_round()
+                round_drops.clear()
+                round_corrupt.clear()
+
+                # -- membership changes land at the round boundary ----------
+                old, new, left, joined = controller.apply_pending()
+                if old != new:
+                    with trace.span("fault/rebuild", k_old=len(old),
+                                    k_new=len(new)):
+                        mesh = _mesh_for(controller, devices)
+                        progs = build_elastic_programs(
+                            plan, model, optimizer, lr_fn, mesh)
+                        with trace.span("fault/reshard"):
+                            state = reshard_async_state(
+                                state, old, new, optimizer, mesh=mesh,
+                                data_axes=plan.data_axes)
+                    report.rebuilds += 1
+                    report.joins += len(joined)
+                    c_rebuilds.inc()
+                    c_joins.inc(len(joined))
+                    g_live.set(controller.k)
+                    g_quorum.set(controller.quorum_count)
+                    if print_fn:
+                        print_fn(f"step {i:5d}  membership {len(old)} -> "
+                                 f"{len(new)} (left={list(left)}, "
+                                 f"joined={list(joined)})")
+                if controller.rejected_joins > report.joins_rejected:
+                    c_joins_rej.inc(controller.rejected_joins
+                                    - report.joins_rejected)
+                    report.joins_rejected = controller.rejected_joins
+
+            report.losses.append(float(m["loss"]))
+            report.steps = i + 1
+            if log_every and print_fn and (i % log_every == 0
+                                           or i == num_steps - 1):
+                print_fn(f"step {i:5d}  loss {report.losses[-1]:.4f}  "
+                         f"k={controller.k}")
+            if ckpt_path and ckpt_every and (i + 1) % ckpt_every == 0:
+                save_checkpoint(ckpt_path, state, step=i + 1,
+                                algo=plan.algo,
+                                workers=controller.workers,
+                                keep=ckpt_keep)
+            if stop_at_step is not None and i + 1 >= stop_at_step:
+                raise Preempted(i + 1)
+    finally:
+        report.wall_time = time.perf_counter() - t0
+        report.final_workers = controller.workers
+    if ckpt_path and not (ckpt_every and report.steps
+                          and report.steps % ckpt_every == 0):
+        save_checkpoint(ckpt_path, state, step=report.steps,
+                        algo=plan.algo, workers=controller.workers,
+                        keep=ckpt_keep)
+    return state, report

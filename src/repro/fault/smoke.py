@@ -1,0 +1,144 @@
+"""Chaos smoke harness — the CI gate for the fault-tolerance stack.
+
+    PYTHONPATH=src python -m repro.fault.smoke --out /tmp/fault-smoke
+
+Runs, on 8 virtual CPU devices:
+
+1. a clean elastic run (full participation) — the convergence reference;
+2. a chaos run under a kill + straggle + corrupt + drop + rejoin
+   schedule with a quorum of 2 — must recover into the clean run's loss
+   band;
+3. the same chaos run again — must be bit-identical (seeded FaultPlan
+   replay determinism, center params and round log compared);
+4. a preempted run (process "dies" mid-flight after a kill) resumed from
+   its latest crash-safe checkpoint — must land in the same band as the
+   uninterrupted chaos run.
+
+Exits nonzero on the first violated property. Telemetry goes to
+``--out`` (metrics JSONL + Perfetto trace) for
+``python -m repro.telemetry.validate``.
+"""
+from __future__ import annotations
+
+import os
+
+# must precede the first jax import: the harness simulates an 8-worker
+# fleet as 8 virtual CPU devices
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse          # noqa: E402
+import sys               # noqa: E402
+
+import jax               # noqa: E402
+import numpy as np       # noqa: E402
+
+from repro import telemetry                          # noqa: E402
+from repro.configs import get_smoke_config           # noqa: E402
+from repro.data.synthetic import LMTokenSource       # noqa: E402
+from repro.models import build_model                 # noqa: E402
+from repro.optim import constant, sgd_momentum       # noqa: E402
+from repro.train.engine import TrainPlan             # noqa: E402
+from repro.fault.elastic import Preempted, elastic_train  # noqa: E402
+
+CHAOS = "kill:3@9,straggle:2@13x2,corrupt:1@21,drop:0@29,join:3@33"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="directory for metrics.jsonl + trace.json")
+    ap.add_argument("--steps", type=int, default=48)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--tau", type=int, default=4)
+    ap.add_argument("--quorum", type=int, default=2)
+    ap.add_argument("--fault-plan", default=CHAOS)
+    args = ap.parse_args(argv)
+
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+        telemetry.configure(
+            metrics_out=os.path.join(args.out, "metrics.jsonl"))
+
+    cfg = get_smoke_config("llama3.2-1b").with_overrides(
+        vocab_size=64, d_ff=128, num_layers=2, dtype="float32")
+    model = build_model(cfg)
+    opt = sgd_momentum(weight_decay=0.0)
+    src = LMTokenSource(cfg.vocab_size, 16, seed=0)
+    batch_fn = lambda step, k: src.batch(4 * k, step)
+    plan = TrainPlan(algo="easgd", tau=args.tau, alpha=0.5,
+                     exchanger="ar", quorum=args.quorum)
+
+    def run(tag, **kw):
+        print(f"-- {tag}")
+        return elastic_train(model, opt, constant(0.05), batch_fn,
+                             plan=plan, num_workers=args.workers,
+                             num_steps=args.steps, seed=0, log_every=16,
+                             **kw)
+
+    failures = []
+
+    def check(name, ok, detail):
+        print(f"{'PASS' if ok else 'FAIL'}: {name} ({detail})")
+        if not ok:
+            failures.append(name)
+
+    # 1+2: clean reference vs chaos run
+    _, clean = run("clean (full participation)")
+    s_chaos, chaos = run("chaos", fault_plan=args.fault_plan)
+    check("chaos faults exercised",
+          chaos.kills >= 1 and chaos.payloads_corrupt >= 1
+          and chaos.payloads_dropped >= 1 and chaos.rebuilds >= 1,
+          f"kills={chaos.kills} corrupt={chaos.payloads_corrupt} "
+          f"dropped={chaos.payloads_dropped} rebuilds={chaos.rebuilds}")
+    # convergence band: chaos must realize most of the clean run's loss
+    # drop — membership churn costs a little progress, not convergence
+    drop_clean = clean.losses[0] - clean.losses[-1]
+    band = 0.35 * drop_clean + 0.05
+    check("chaos converges into the clean loss band",
+          chaos.losses[-1] < clean.losses[0]
+          and abs(chaos.losses[-1] - clean.losses[-1]) <= band,
+          f"chaos {chaos.losses[-1]:.4f} vs clean {clean.losses[-1]:.4f} "
+          f"(band {band:.4f})")
+
+    # 3: seeded replay is bit-identical
+    s_replay, replay = run("chaos replay", fault_plan=args.fault_plan)
+    bitwise = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(s_chaos["center"]),
+                        jax.tree.leaves(s_replay["center"])))
+    check("fault replay bit-identical",
+          bitwise and chaos.round_log == replay.round_log,
+          f"center equal={bitwise}, "
+          f"round_log equal={chaos.round_log == replay.round_log}")
+
+    # 4: preempt mid-chaos, resume from the crash-safe checkpoint
+    ck = os.path.join(args.out or "/tmp", "fault-smoke-ck")
+    try:
+        run("chaos preempted", fault_plan=args.fault_plan, ckpt_path=ck,
+            ckpt_every=args.steps // 6, stop_at_step=args.steps // 2 + 2)
+        check("preemption fired", False, "Preempted was not raised")
+    except Preempted as e:
+        print(f"   preempted at step {e.step}")
+    _, resumed = run("chaos resumed", fault_plan=args.fault_plan,
+                     resume_from=ck)
+    check("preempt+resume lands in the chaos band",
+          resumed.steps == args.steps
+          and abs(resumed.losses[-1] - chaos.losses[-1]) <= band,
+          f"resumed {resumed.losses[-1]:.4f} vs chaos "
+          f"{chaos.losses[-1]:.4f} (band {band:.4f})")
+
+    telemetry.flush(force=True)
+    if args.out:
+        telemetry.trace.export(os.path.join(args.out, "trace.json"))
+        print(f"telemetry -> {args.out}")
+    if failures:
+        print(f"fault-smoke: {len(failures)} FAILED: {failures}")
+        return 1
+    print("fault-smoke: all properties hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,10 +11,19 @@
     PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
         --smoke --steps 100 --ckpt /tmp/ck --resume /tmp/ck
 
+    # elastic chaos run (quorum sync + injected faults; see repro.fault):
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+        --smoke --algo easgd --tau 4 --workers 4 --quorum 2 \
+        --fault-plan 'kill:3@9,straggle:2@13x2,join:3@33'
+
 Runs the reduced (smoke) variant by default on the host CPU devices; the
 full config is exercised through the dry-run (-m repro.launch.dryrun).
 Every algorithm goes through the same engine (``repro.train.engine``), so
-``--ckpt``/``--resume`` work for all of them.
+``--ckpt``/``--resume`` work for all of them. ``--quorum``/``--fault-plan``
+(async algos only) route through ``repro.fault.elastic.elastic_train``:
+dynamic membership, staleness-scaled quorum averaging, deterministic
+fault injection.
 """
 from __future__ import annotations
 
@@ -34,24 +43,26 @@ from repro.train.engine import TrainPlan
 from repro.train.loop import train
 
 
-def synthetic_batches(cfg, batch_size: int, steps: int, seq_len: int = 128):
+def synthetic_batch(cfg, batch_size: int, step: int, seq_len: int = 128):
+    """The batch at index ``step`` — deterministic in (cfg, sizes, step),
+    so it doubles as the elastic loop's ``batch_fn(step, k)``."""
     if cfg.family == "conv":
-        src = ImageSource(cfg.image_size, cfg.num_classes)
-        for i in range(steps):
-            yield src.batch(batch_size, i)
-    else:
-        src = LMTokenSource(cfg.vocab_size, seq_len)
-        for i in range(steps):
-            b = src.batch(batch_size, i)
-            if cfg.family == "encdec":
-                b["frames"] = np.random.default_rng(i).normal(
-                    0, 1, (batch_size, cfg.encoder_seq_len,
-                           cfg.d_model)).astype(np.float32)
-            if cfg.modality == "vlm":
-                b["image_embeds"] = np.zeros(
-                    (batch_size, cfg.num_image_tokens, cfg.d_model),
-                    np.float32)
-            yield b
+        return ImageSource(cfg.image_size, cfg.num_classes).batch(
+            batch_size, step)
+    b = LMTokenSource(cfg.vocab_size, seq_len).batch(batch_size, step)
+    if cfg.family == "encdec":
+        b["frames"] = np.random.default_rng(step).normal(
+            0, 1, (batch_size, cfg.encoder_seq_len,
+                   cfg.d_model)).astype(np.float32)
+    if cfg.modality == "vlm":
+        b["image_embeds"] = np.zeros(
+            (batch_size, cfg.num_image_tokens, cfg.d_model), np.float32)
+    return b
+
+
+def synthetic_batches(cfg, batch_size: int, steps: int, seq_len: int = 128):
+    for i in range(steps):
+        yield synthetic_batch(cfg, batch_size, i, seq_len)
 
 
 def main():
@@ -89,6 +100,18 @@ def main():
                          "pinned to 1)")
     ap.add_argument("--mode", default="zero1", choices=["zero1", "ar"],
                     help="gspmd gradient reduction mode")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="elastic fleet size (default: all visible "
+                         "devices); only with --quorum/--fault-plan")
+    ap.add_argument("--quorum", type=int, default=None,
+                    help="min reporting workers for an averaging round "
+                         "(easgd/asgd): below it the round degrades to a "
+                         "local step; enables the elastic loop")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC",
+                    help="deterministic fault injection, e.g. "
+                         "'kill:1@9,straggle:2@5x3,corrupt:0@13' "
+                         "(kind:worker@step[xrounds]); enables the "
+                         "elastic loop")
     ap.add_argument("--attn-impl", default=None,
                     choices=["auto", "flash", "ref", "blockwise"],
                     help="attention implementation for the train step: "
@@ -119,15 +142,53 @@ def main():
     opt = (sgd_momentum(weight_decay=0.0) if args.optimizer == "sgd"
            else adamw())
     lr_fn = warmup_cosine(args.lr, 10, args.steps)
+    elastic = args.quorum is not None or args.fault_plan is not None
     try:
         plan = TrainPlan(algo=args.algo, exchanger=args.exchanger,
                          scheme=args.scheme, microbatches=args.microbatches,
                          bucket_bytes=args.bucket_bytes,
                          sharded_update=args.sharded_update,
                          overlap=args.overlap, tau=args.tau,
-                         alpha=args.alpha, mode=args.mode)
+                         alpha=args.alpha, mode=args.mode,
+                         quorum=args.quorum if elastic else None)
     except ValueError as e:
         ap.error(str(e))
+    if elastic:
+        if not plan.is_async:
+            ap.error("--quorum/--fault-plan need an async plan "
+                     "(--algo easgd|asgd); bsp/gspmd fault tolerance is "
+                     "checkpoint restart via --ckpt/--resume")
+        from repro.fault.elastic import elastic_train
+
+        def batch_fn(step, k):
+            # per-worker batch size held constant: the global batch
+            # scales with the live fleet, like a real elastic run
+            return synthetic_batch(cfg, args.batch * k, step, args.seq)
+
+        try:
+            _, erep = elastic_train(
+                model, opt, lr_fn, batch_fn, plan=plan,
+                num_workers=args.workers, num_steps=args.steps,
+                fault_plan=args.fault_plan, ckpt_path=args.ckpt,
+                ckpt_every=args.steps // 4 if args.ckpt else 0,
+                resume_from=args.resume)
+        except ValueError as e:
+            raise SystemExit(str(e))
+        if args.metrics_out:
+            telemetry.flush(force=True)
+            print(f"metrics -> {args.metrics_out}")
+        if args.trace_out:
+            telemetry.trace.export(args.trace_out)
+            print(f"trace -> {args.trace_out}")
+        print(f"done: {erep.steps} steps ({plan.algo} elastic), "
+              f"fleet {erep.final_workers}, "
+              f"rounds {erep.rounds_synced} synced / "
+              f"{erep.rounds_skipped_quorum} below-quorum, "
+              f"kills {erep.kills}, joins {erep.joins}, "
+              f"rebuilds {erep.rebuilds}, payloads dropped "
+              f"{erep.payloads_dropped} / corrupt {erep.payloads_corrupt}, "
+              f"loss {erep.losses[0]:.4f} -> {erep.losses[-1]:.4f}")
+        return
     batches = synthetic_batches(cfg, args.batch, args.steps, args.seq)
     try:
         _, report = train(model, opt, lr_fn, mesh, batches, plan=plan,

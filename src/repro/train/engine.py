@@ -66,6 +66,7 @@ class TrainPlan:
     overlap         yes     —           —
     tau             —       yes         —
     alpha           —       easgd only  —
+    quorum          —       yes (elastic) —
     mode            —       —           ar | zero1
     =============== ======= =========== =======
 
@@ -82,6 +83,7 @@ class TrainPlan:
     tau: int = 1                     # easgd/asgd averaging period
     alpha: float | None = None       # easgd elastic coefficient
     mode: str = "zero1"              # gspmd: ar | zero1
+    quorum: int | None = None        # elastic: min reporters per round
     data_axes: tuple = ("data",)
 
     def __post_init__(self):
@@ -130,6 +132,12 @@ class TrainPlan:
         if self.is_async and self.exchanger == "none":
             raise ValueError("async plans need a real exchanger for the "
                              "center traffic (exchanger='none')")
+        if self.quorum is not None:
+            if not self.is_async:
+                raise ValueError(f"quorum is an elastic easgd/asgd knob "
+                                 f"(algo={self.algo!r})")
+            if self.quorum < 1:
+                raise ValueError(f"quorum must be >= 1 (got {self.quorum})")
 
     @property
     def is_async(self) -> bool:
@@ -178,9 +186,60 @@ def _plan_wire(plan: TrainPlan, model: Model, mesh) -> dict | None:
     return wire_summary(ex, rsplan, sync_every=plan.tau)
 
 
+@dataclass(frozen=True)
+class ElasticPrograms:
+    """The async plan resolved for ONE membership (one k / one mesh).
+
+    The elastic loop (``repro.fault.elastic``) holds exactly one of these
+    at a time and rebuilds it — through this same constructor path, so
+    plan resolution is shared with ``build_engine`` — whenever the
+    membership controller changes the fleet. ``sync`` is the quorum
+    variant: ``sync(state, batch, rng, absorb, attract)`` with (k,) fp32
+    per-worker weight vectors (see ``core.easgd.make_async_step``)."""
+    plan: TrainPlan
+    mesh: Any
+    k: int
+    local: Callable
+    sync: Callable
+    init_state: Callable[[Any], Any]
+    wire: dict | None = None
+
+
+def build_elastic_programs(plan: TrainPlan, model: Model,
+                           optimizer: Optimizer, lr_fn: Callable, mesh, *,
+                           sum_fn=None) -> ElasticPrograms:
+    """Resolve an async ``plan`` to local/quorum-sync programs on ``mesh``.
+
+    This is ``build_engine``'s async arm with the quorum sync step — the
+    membership-change rebuild path. The mesh may span any subset of
+    devices (the surviving fleet); k is read off it."""
+    if not plan.is_async:
+        raise ValueError(f"elastic programs are an easgd/asgd feature "
+                         f"(algo={plan.algo!r})")
+    sum_fn = sum_fn or default_chunk_sum
+    ex = get_exchanger(plan.exchanger)
+    k = prod(int(mesh.shape[a]) for a in plan.data_axes)
+    local, sync = make_async_step(
+        model, optimizer, ex, lr_fn, mesh, algo=plan.algo, alpha=plan.alpha,
+        data_axes=plan.data_axes, sum_fn=sum_fn,
+        bucket_bytes=plan.bucket_bytes, quorum=True)
+
+    def init_state(key):
+        return init_async_state(model, optimizer, key, k, mesh=mesh,
+                                data_axes=plan.data_axes)
+
+    return ElasticPrograms(plan, mesh, k, jax.jit(local), jax.jit(sync),
+                           init_state, _plan_wire(plan, model, mesh))
+
+
 def build_engine(plan: TrainPlan, model: Model, optimizer: Optimizer,
                  lr_fn: Callable, mesh, *, sum_fn=None) -> Engine:
     """Resolve ``plan`` to ``(init_state, step, state_shardings)``."""
+    if plan.quorum is not None:
+        raise ValueError(
+            "quorum plans are elastic: drive them with "
+            "repro.fault.elastic.elastic_train (build_engine builds "
+            "fixed-membership engines and would silently ignore quorum)")
     sum_fn = sum_fn or default_chunk_sum
 
     from repro import telemetry

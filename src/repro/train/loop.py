@@ -106,7 +106,8 @@ def train(model: Model, optimizer: Optimizer, lr_fn, mesh, batches, *,
           exchanger: str = "asa", scheme: str = "subgd",
           data_axes=("data",), num_steps: int = 100, seed: int = 0,
           log_every: int = 10, ckpt_path: str | None = None,
-          ckpt_every: int = 0, resume_from: str | None = None,
+          ckpt_every: int = 0, ckpt_keep: int = 3,
+          resume_from: str | None = None,
           state=None, sum_fn=None, microbatches: int = 1,
           bucket_bytes: int = 0, sharded_update: bool = False,
           overlap: str | None = None, tau: int = 1,
@@ -245,7 +246,7 @@ def train(model: Model, optimizer: Optimizer, lr_fn, mesh, batches, *,
         if ckpt_path and ckpt_every and (i + 1) % ckpt_every == 0:
             with trace.span("train/checkpoint", step=i + 1):
                 save_checkpoint(ckpt_path, state, step=i + 1,
-                                algo=plan.algo)
+                                algo=plan.algo, keep=ckpt_keep)
             saved_at = i + 1
         report.steps = i + 1
     with trace.span("train/final_block"):
@@ -260,6 +261,7 @@ def train(model: Model, optimizer: Optimizer, lr_fn, mesh, batches, *,
     if ckpt_path and report.steps != saved_at:
         # the in-loop save already covered the final step when ckpt_every
         # divides it — don't write the same step twice
-        save_checkpoint(ckpt_path, state, step=report.steps, algo=plan.algo)
+        save_checkpoint(ckpt_path, state, step=report.steps, algo=plan.algo,
+                        keep=ckpt_keep)
     telemetry.flush(force=True)
     return state, report

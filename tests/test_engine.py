@@ -303,7 +303,7 @@ def test_final_checkpoint_saved_once(tmp_path, monkeypatch):
     import repro.train.loop as loop_mod
     calls = []
     monkeypatch.setattr(loop_mod, "save_checkpoint",
-                        lambda path, state, step=None, algo=None:
+                        lambda path, state, step=None, algo=None, **kw:
                         calls.append(step))
     cfg, model = _tiny_lm()
     mesh = _mesh1()
