@@ -1,0 +1,237 @@
+"""Benchmark history: compare a fresh ``BENCH_*.json`` against a committed
+baseline, with per-metric tolerance bands — the regression gate behind
+``benchmarks/run.py --check``.
+
+Metric space: every bench row contributes ``<row>.us_per_call`` plus one
+metric per ``key=value`` pair of its ``derived`` string (the
+``tok_s=141.1;p50_ms=1.2;compiles=1`` convention every bench module
+already emits). Direction is inferred from the key name:
+
+- **higher is better**: throughputs and ratios — ``tok_s``, ``speedup``,
+  ``examples_per_s``, ``continuous_over_static``, ``*_tok_s``,
+  ``*_frac``/``mfu`` attribution ratios;
+- **lower is better**: times and footprints — ``us_per_call``, ``*_ms`` /
+  ``*_us`` / ``*_s``, ``*bytes`` / ``workspace``, ``compiles``;
+- anything else is informational (tracked, never gates).
+
+Tolerance: a metric regresses when it moves against its direction by more
+than ``rtol`` (relative). ``rtol`` resolves per metric: exact
+``"<row>.<key>"`` entry in the tolerances file, then bare ``"<key>"``
+entry, then ``default_rtol``. The committed default (0.15) is strict
+enough that a 20% throughput drop fails; the CI job loosens it with
+``--rtol`` because shared-runner CPU timings are noisy — the committed
+band is the *intent*, the CI override is the *reality of the runner*.
+
+Baselines live in ``benchmarks/baselines/`` (``BENCH_quick_cpu.json`` for
+``--quick`` runs, ``BENCH_full_cpu.json`` otherwise) next to
+``tolerances.json``. ``python benchmarks/history.py NEW.json`` is the
+standalone CLI; ``run.py --check`` calls :func:`check_against_dir`.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from dataclasses import dataclass
+
+# higher-better: multi-token patterns matched as substrings, single
+# tokens matched against the "_"-split token set ("bw" must match
+# achieved_bw but never bwd_ms)
+HIGHER_SUBSTR = ("tok_s", "examples_per_s", "continuous_over_static",
+                 "speedup", "tflops")
+HIGHER_TOKENS = frozenset({"mfu", "frac", "bw", "speedup", "gbps"})
+LOWER_SUFFIX = ("us_per_call", "_ms", "_us", "_s", "bytes", "workspace",
+                "compiles", "overhead", "exposed")
+
+OK, REGRESSED, IMPROVED, INFO, MISSING, NEW = (
+    "ok", "regressed", "improved", "info", "missing", "new")
+
+
+def direction(key: str) -> int:
+    """+1 higher-better, -1 lower-better, 0 informational. Higher-better
+    checked first so ``tok_s`` wins over the ``_s`` suffix."""
+    if any(pat in key for pat in HIGHER_SUBSTR):
+        return 1
+    if HIGHER_TOKENS & set(key.split("_")):
+        return 1
+    for pat in LOWER_SUFFIX:
+        if key.endswith(pat) or key == pat.lstrip("_"):
+            return -1
+    return 0
+
+
+def parse_derived(derived: str) -> dict:
+    """``"tok_s=141.1;p50_ms=1.2"`` -> numeric dict (non-floats skipped)."""
+    out = {}
+    for part in filter(None, (p.strip() for p in str(derived).split(";"))):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k.strip()] = float(v)
+        except ValueError:
+            continue
+    return out
+
+
+def metrics_of(obj: dict) -> dict:
+    """Flatten a BENCH object into ``{"<row>.<key>": value}``. Error rows
+    (``*/ERROR``) are dropped — a crashed bench is run.py's exit-1, not a
+    number to diff."""
+    out = {}
+    for row in obj.get("rows", []):
+        name = row.get("name", "")
+        if not name or name.endswith("/ERROR"):
+            continue
+        us = row.get("us_per_call")
+        if isinstance(us, (int, float)):
+            out[f"{name}.us_per_call"] = float(us)
+        for k, v in parse_derived(row.get("derived", "")).items():
+            out[f"{name}.{k}"] = v
+    return out
+
+
+@dataclass
+class Verdict:
+    metric: str
+    status: str          # ok | regressed | improved | info | missing | new
+    base: float | None = None
+    new: float | None = None
+    rel: float = 0.0     # signed relative change vs baseline
+    rtol: float = 0.0
+
+    def line(self) -> str:
+        mark = {REGRESSED: "FAIL", IMPROVED: "  up", OK: "  ok",
+                INFO: "info", MISSING: "miss", NEW: " new"}[self.status]
+        b = "-" if self.base is None else f"{self.base:.4g}"
+        n = "-" if self.new is None else f"{self.new:.4g}"
+        return (f"{mark}  {self.metric:<52s} {b:>12s} -> {n:>12s}  "
+                f"{self.rel * 100:+7.1f}%  (rtol {self.rtol:.2f})")
+
+
+def _rtol_for(metric: str, default_rtol: float, per_metric: dict) -> float:
+    if metric in per_metric:
+        return float(per_metric[metric])
+    key = metric.rsplit(".", 1)[-1]
+    if key in per_metric:
+        return float(per_metric[key])
+    return float(default_rtol)
+
+
+def compare(baseline: dict, new: dict, *, default_rtol: float = 0.15,
+            per_metric: dict | None = None) -> list:
+    """Verdict per metric of the union; gate on ``status == 'regressed'``."""
+    per_metric = per_metric or {}
+    base_m, new_m = metrics_of(baseline), metrics_of(new)
+    verdicts = []
+    for metric in sorted(base_m):
+        b = base_m[metric]
+        rtol = _rtol_for(metric, default_rtol, per_metric)
+        if metric not in new_m:
+            verdicts.append(Verdict(metric, MISSING, base=b, rtol=rtol))
+            continue
+        n = new_m[metric]
+        rel = (n - b) / b if b else 0.0
+        d = direction(metric.rsplit(".", 1)[-1])
+        if d == 0 or b == 0:
+            status = INFO
+        elif rel * d < -rtol:        # moved against the good direction
+            status = REGRESSED
+        elif rel * d > rtol:
+            status = IMPROVED
+        else:
+            status = OK
+        verdicts.append(Verdict(metric, status, base=b, new=n, rel=rel,
+                                rtol=rtol))
+    for metric in sorted(set(new_m) - set(base_m)):
+        verdicts.append(Verdict(metric, NEW, new=new_m[metric]))
+    return verdicts
+
+
+def load_tolerances(baselines_dir: str) -> tuple:
+    path = os.path.join(baselines_dir, "tolerances.json")
+    if not os.path.exists(path):
+        return 0.15, {}
+    with open(path) as f:
+        tol = json.load(f)
+    return float(tol.get("default_rtol", 0.15)), dict(
+        tol.get("per_metric", {}))
+
+
+def baseline_path_for(obj: dict, baselines_dir: str) -> str:
+    name = ("BENCH_quick_cpu.json" if obj.get("quick")
+            else "BENCH_full_cpu.json")
+    return os.path.join(baselines_dir, name)
+
+
+def check_against_dir(obj: dict, baselines_dir: str, *,
+                      rtol: float | None = None) -> tuple:
+    """``(ok, verdicts, baseline_path)`` — ``ok`` is True when nothing
+    regressed (or no baseline exists yet for this mode, which is reported
+    but does not gate: the first run *creates* history)."""
+    path = baseline_path_for(obj, baselines_dir)
+    if not os.path.exists(path):
+        return True, [], path
+    with open(path) as f:
+        baseline = json.load(f)
+    default_rtol, per_metric = load_tolerances(baselines_dir)
+    if rtol is not None:
+        default_rtol, per_metric = float(rtol), {}
+    verdicts = compare(baseline, obj, default_rtol=default_rtol,
+                       per_metric=per_metric)
+    ok = not any(v.status == REGRESSED for v in verdicts)
+    return ok, verdicts, path
+
+
+def render(verdicts: list, *, only_notable: bool = False) -> str:
+    lines = []
+    for v in verdicts:
+        if only_notable and v.status in (OK, INFO, NEW):
+            continue
+        lines.append(v.line())
+    n_reg = sum(1 for v in verdicts if v.status == REGRESSED)
+    n_imp = sum(1 for v in verdicts if v.status == IMPROVED)
+    lines.append(f"{len(verdicts)} metrics: {n_reg} regressed, "
+                 f"{n_imp} improved")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("new", help="fresh BENCH_*.json to check")
+    ap.add_argument("--baseline", default=None,
+                    help="explicit baseline BENCH json")
+    ap.add_argument("--baselines", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "baselines"),
+        help="baselines directory (default: benchmarks/baselines)")
+    ap.add_argument("--rtol", type=float, default=None,
+                    help="override every tolerance band")
+    ap.add_argument("--all", action="store_true",
+                    help="print every verdict, not just notable ones")
+    args = ap.parse_args(argv)
+    with open(args.new) as f:
+        obj = json.load(f)
+    if args.baseline:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        default_rtol, per_metric = load_tolerances(args.baselines)
+        if args.rtol is not None:
+            default_rtol, per_metric = args.rtol, {}
+        verdicts = compare(baseline, obj, default_rtol=default_rtol,
+                           per_metric=per_metric)
+        ok = not any(v.status == REGRESSED for v in verdicts)
+        base_path = args.baseline
+    else:
+        ok, verdicts, base_path = check_against_dir(
+            obj, args.baselines, rtol=args.rtol)
+    if not verdicts:
+        print(f"no baseline at {base_path} — nothing to compare")
+        return 0
+    print(f"comparing {args.new} vs {base_path}")
+    print(render(verdicts, only_notable=not args.all))
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

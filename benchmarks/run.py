@@ -26,7 +26,9 @@ bench_easgd + bench_serve + bench_attention at reduced scale); ``--json
 PATH`` additionally writes the
 rows as JSON so the perf trajectory accumulates as artifacts
 (``BENCH_*.json`` — async throughput rows land alongside comm/overlap/
-serve/attention).
+serve/attention). ``--check`` turns the run into a regression gate: rows
+are diffed against ``benchmarks/baselines/`` through
+``benchmarks/history.py`` tolerance bands and a regression exits nonzero.
 """
 import argparse
 import inspect
@@ -55,6 +57,17 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as JSON (perf-trajectory "
                          "artifact)")
+    ap.add_argument("--check", action="store_true",
+                    help="compare this run against the committed baseline "
+                         "(benchmarks/baselines) and exit nonzero on any "
+                         "regression outside the tolerance bands")
+    ap.add_argument("--baselines", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "baselines"),
+        metavar="DIR", help="baseline directory for --check")
+    ap.add_argument("--rtol", type=float, default=None,
+                    help="override every --check tolerance band (CI uses "
+                         "a loose value; committed tolerances are the "
+                         "intent)")
     ap.add_argument("--metrics-out", default=None, metavar="JSONL",
                     help="dump telemetry metrics recorded during the "
                          "benches (incl. the serve engines' registries) "
@@ -97,22 +110,44 @@ def main() -> None:
                          "derived": f"{type(e).__name__}:{e}"})
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
-    if args.json:
+    obj = None
+    if args.json or args.check:
         # same schema + run context as live-run telemetry (--metrics-out):
         # every BENCH_*.json is attributable to a host/device/backend and
         # comparable across PRs (validated by repro.telemetry.validate)
         from repro.telemetry.schema import SCHEMA_VERSION, run_context
+        obj = {"schema_version": SCHEMA_VERSION, "run": run_context(),
+               "quick": args.quick, "rows": rows}
+    if args.json:
+        # validate BEFORE writing: a malformed artifact must never land on
+        # disk where the next PR's --check would trust it
+        from repro.telemetry.schema import validate_bench_obj
+        errs = validate_bench_obj(obj, args.json)
+        if errs:
+            for e in errs:
+                print(f"bench schema: {e}", file=sys.stderr)
+            sys.exit(1)
         with open(args.json, "w") as f:
-            json.dump({"schema_version": SCHEMA_VERSION,
-                       "run": run_context(),
-                       "quick": args.quick, "rows": rows}, f, indent=1)
+            json.dump(obj, f, indent=1)
+    regressed = False
+    if args.check:
+        from benchmarks.history import check_against_dir, render
+        ok, verdicts, base_path = check_against_dir(obj, args.baselines,
+                                                    rtol=args.rtol)
+        if verdicts:
+            print(f"== regression check vs {base_path} ==")
+            print(render(verdicts, only_notable=True))
+        else:
+            print(f"regression check: no baseline at {base_path} — "
+                  f"nothing to gate")
+        regressed = not ok
     if args.metrics_out:
         from repro import telemetry
         telemetry.dump_metrics(args.metrics_out)
     if args.trace_out:
         from repro import telemetry
         telemetry.trace.export(args.trace_out)
-    if failed:
+    if failed or regressed:
         sys.exit(1)
 
 

@@ -34,7 +34,8 @@ counters ``fault/kills``, ``fault/joins``, ``fault/joins_rejected``,
 ``fault/straggles``, ``fault/payloads_dropped``,
 ``fault/payloads_corrupt``, ``fault/rounds_synced``,
 ``fault/rounds_skipped_quorum``, ``fault/rebuilds``,
-``fault/ckpt_fallbacks``; gauges ``fault/live_workers``,
+``fault/ckpt_fallbacks``, ``anomaly/stragglers_flagged``; gauges
+``fault/live_workers``,
 ``fault/quorum``, ``fault/round_staleness_max``,
 ``fault/round_staleness_mean``, ``fault/absorbed_weight_sum``; spans
 ``fault/round`` (with membership attrs), ``fault/rebuild``,
@@ -52,8 +53,8 @@ from repro.checkpoint.ckpt import load_meta, restore_for_resume, \
     save_checkpoint
 from repro.core.easgd import reshard_async_state
 from repro.fault.inject import FaultPlan, bitflip, payload_checksum
-from repro.fault.membership import MembershipController
-from repro.telemetry import metrics, trace
+from repro.fault.membership import MembershipController, WorkerState
+from repro.telemetry import anomaly, metrics, profile, trace
 from repro.train.engine import TrainPlan, build_elastic_programs
 
 
@@ -83,6 +84,8 @@ class ElasticReport:
     payloads_dropped: int = 0
     payloads_corrupt: int = 0
     rebuilds: int = 0
+    slows: int = 0                 # injected slowdowns ("slow" events)
+    stragglers_detected: int = 0   # detector -> mark_straggling calls
     final_workers: tuple = ()
     # per synced round: (step, reporting ids, absorb weights) — the
     # audit trail the staleness tests hand-check
@@ -177,6 +180,7 @@ def elastic_train(model, optimizer, lr_fn, batch_fn, *,
     c_synced = metrics.counter("fault/rounds_synced")
     c_skipped = metrics.counter("fault/rounds_skipped_quorum")
     c_rebuilds = metrics.counter("fault/rebuilds")
+    c_stragglers = metrics.counter("anomaly/stragglers_flagged")
     g_live = metrics.gauge("fault/live_workers")
     g_quorum = metrics.gauge("fault/quorum")
     g_stale_max = metrics.gauge("fault/round_staleness_max")
@@ -193,6 +197,15 @@ def elastic_train(model, optimizer, lr_fn, batch_fn, *,
     # payload exclusions scoped to the current round
     round_drops: set = set()
     round_corrupt: set = set()
+    # injected slowdowns: worker -> (rounds left, timing factor). The
+    # controller is NOT told — the fleet detector below must discover the
+    # straggler from the observed per-worker step durations.
+    slow_left: dict = {}
+    det_fleet = anomaly.FleetDetector()
+    # programs whose compiling first dispatch has already happened —
+    # only warm dispatches feed the per-program attribution means
+    seen_progs: set = set()
+    rebuilt_now = False
     t0 = time.perf_counter()
     try:
         for i in range(start_step, num_steps):
@@ -219,8 +232,19 @@ def elastic_train(model, optimizer, lr_fn, batch_fn, *,
                     round_drops.add(ev.worker)
                 elif ev.kind == "corrupt":
                     round_corrupt.add((ev.worker, ev))
+                elif ev.kind == "slow":
+                    if ev.worker in controller.workers:
+                        slow_left[ev.worker] = (
+                            max(ev.rounds,
+                                slow_left.get(ev.worker, (0, 0.0))[0]),
+                            float(ev.factor))
+                        report.slows += 1
+                        trace.instant("fault/slow", worker=ev.worker,
+                                      step=i, factor=ev.factor)
 
             is_round = (i + 1) % plan.tau == 0
+            prog_name = "train/local"
+            t_step = time.perf_counter()
             if not is_round:
                 state, m = progs.local(state, batch, rng_i)
             else:
@@ -256,6 +280,7 @@ def elastic_train(model, optimizer, lr_fn, batch_fn, *,
                                     stale_max=controller.max_staleness()):
                         state, m = progs.sync(state, batch, rng_i,
                                               absorb, attract)
+                    prog_name = "train/sync"
                     report.rounds_synced += 1
                     report.round_log.append(
                         (i, tuple(reporting), absorb.tolist()))
@@ -282,6 +307,7 @@ def elastic_train(model, optimizer, lr_fn, batch_fn, *,
                         mesh = _mesh_for(controller, devices)
                         progs = build_elastic_programs(
                             plan, model, optimizer, lr_fn, mesh)
+                        rebuilt_now = True
                         with trace.span("fault/reshard"):
                             state = reshard_async_state(
                                 state, old, new, optimizer, mesh=mesh,
@@ -300,6 +326,40 @@ def elastic_train(model, optimizer, lr_fn, batch_fn, *,
                     c_joins_rej.inc(controller.rejected_joins
                                     - report.joins_rejected)
                     report.joins_rejected = controller.rejected_joins
+
+            # -- observed per-worker timing -> straggler detection ----------
+            # One shared host measurement per step; an injected slowdown
+            # inflates the affected worker's observed duration by its
+            # deterministic factor, so the flag decision (a *relative*
+            # robust-stats comparison) replays bit-identically no matter
+            # what the wall clock did.
+            dt_step = time.perf_counter() - t_step
+            # each program's first dispatch after a (re)build is its
+            # compiling call — instrument() records that as compile/*;
+            # only warm dispatches feed the attribution mean. The step
+            # that triggered a rebuild still ran the old (warm) programs,
+            # so it is observed first and the seen-set reset after.
+            if prog_name in seen_progs:
+                profile.observe(prog_name, dt_step)
+            else:
+                seen_progs.add(prog_name)
+            if rebuilt_now:
+                seen_progs.clear()
+                rebuilt_now = False
+            durations = {
+                w: dt_step * (slow_left[w][1] if w in slow_left else 1.0)
+                for w in controller.workers}
+            for w in det_fleet.observe(durations):
+                if controller.state_of(w) == WorkerState.STRAGGLING:
+                    continue       # already sitting out; don't re-count
+                if controller.mark_straggling(w, 1):
+                    report.stragglers_detected += 1
+                    c_stragglers.inc()
+                    trace.instant("anomaly/straggler", worker=w, step=i,
+                                  k=controller.k)
+            if is_round and slow_left:
+                slow_left = {w: (r - 1, f)
+                             for w, (r, f) in slow_left.items() if r > 1}
 
             report.losses.append(float(m["loss"]))
             report.steps = i + 1

@@ -25,6 +25,14 @@ elastic loop — see DESIGN.md "Fault tolerance & elasticity"):
                     the wire; the integrity check (crc32) detects it and
                     the round excludes the payload (equivalent to a drop,
                     plus a detection counter).
+``slow:W@SxD``      worker W runs slow (x ``factor``, default 8) for the D
+                    rounds starting at step S. Unlike ``straggle`` the
+                    membership controller is *not* told — the anomaly
+                    detector must discover the straggler from observed
+                    per-worker timing and mark it itself. The slowdown is
+                    modeled deterministically (the worker's observed step
+                    time is the shared measurement times ``factor``), so
+                    replay stays bit-identical.
 
 The spec grammar above round-trips through :meth:`FaultPlan.from_spec` /
 :meth:`FaultPlan.to_spec` — it is what ``--fault-plan`` on the train
@@ -37,7 +45,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-KINDS = ("kill", "join", "straggle", "drop", "corrupt")
+KINDS = ("kill", "join", "straggle", "drop", "corrupt", "slow")
 
 
 @dataclass(frozen=True)
@@ -45,8 +53,10 @@ class FaultEvent:
     kind: str
     worker: int
     step: int
-    # straggle only: how many averaging rounds the worker misses
+    # straggle/slow only: how many averaging rounds the fault spans
     rounds: int = 1
+    # slow only: multiplier on the worker's observed step time
+    factor: float = 8.0
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -56,10 +66,12 @@ class FaultEvent:
             raise ValueError(f"worker/step must be >= 0 ({self})")
         if self.rounds < 1:
             raise ValueError(f"straggle rounds must be >= 1 ({self})")
+        if self.kind == "slow" and self.factor <= 1.0:
+            raise ValueError(f"slow factor must be > 1 ({self})")
 
     def to_spec(self) -> str:
         s = f"{self.kind}:{self.worker}@{self.step}"
-        if self.kind == "straggle":
+        if self.kind in ("straggle", "slow"):
             s += f"x{self.rounds}"
         return s
 
@@ -92,7 +104,7 @@ class FaultPlan:
                 rounds = 1
                 if "x" in at:
                     at, d = at.split("x", 1)
-                    rounds = int(d)
+                    rounds = int(d)     # straggle/slow duration
                 events.append(FaultEvent(kind.strip(), int(worker),
                                          int(at), rounds))
             except ValueError as e:

@@ -72,6 +72,7 @@ class MembershipController:
         self._pending_join: list[int] = []
         self.rounds = 0                            # boundaries seen
         self.rejected_joins = 0
+        self.observed_straggles = 0   # detection-driven (mark_straggling)
 
     # -- introspection ------------------------------------------------------
 
@@ -139,6 +140,18 @@ class MembershipController:
         self._straggle[worker] = max(self._straggle.get(worker, 0),
                                      int(rounds))
         return True
+
+    def mark_straggling(self, worker: int, rounds: int = 1) -> bool:
+        """Detection-driven straggle: the anomaly detector *observed* this
+        worker running slow (as opposed to an injected/announced
+        ``straggle``). Same mechanics — the worker keeps taking local
+        steps but skips the next ``rounds`` averaging rounds — tallied
+        separately so reports can distinguish announced from discovered
+        stragglers."""
+        if self.straggle(worker, rounds):
+            self.observed_straggles += 1
+            return True
+        return False
 
     # -- round protocol -----------------------------------------------------
 

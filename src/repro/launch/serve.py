@@ -64,7 +64,13 @@ def main():
     ap.add_argument("--trace-out", default=None, metavar="JSON",
                     help="write host-side spans (per-request lifecycle + "
                          "decode dispatches) as Chrome-trace/Perfetto JSON")
+    ap.add_argument("--no-profile", action="store_true",
+                    help="disable per-program cost attribution "
+                         "(profile/* and compile/* gauges); same as "
+                         "REPRO_TELEMETRY_PROFILE=0")
     args = ap.parse_args()
+    if args.no_profile:
+        telemetry.configure(profile=False)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.family != "decoder":

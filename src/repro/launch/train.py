@@ -129,10 +129,16 @@ def main():
     ap.add_argument("--trace-out", default=None, metavar="JSON",
                     help="write host-side spans as Chrome-trace/Perfetto "
                          "JSON (load at ui.perfetto.dev)")
+    ap.add_argument("--no-profile", action="store_true",
+                    help="disable per-program cost attribution "
+                         "(profile/* and compile/* gauges); same as "
+                         "REPRO_TELEMETRY_PROFILE=0")
     args = ap.parse_args()
 
     if args.metrics_out:
         telemetry.configure(metrics_out=args.metrics_out)
+    if args.no_profile:
+        telemetry.configure(profile=False)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     cfg = with_attn_impl(cfg, args.attn_impl)

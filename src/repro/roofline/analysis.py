@@ -13,6 +13,7 @@ all-reduce / reduce-scatter / all-to-all / collective-permute.
 """
 from __future__ import annotations
 
+import os
 import re
 from dataclasses import dataclass, field
 
@@ -20,6 +21,23 @@ from dataclasses import dataclass, field
 PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
 HBM_BW = 819e9           # B/s
 ICI_BW = 50e9            # B/s per link
+
+
+def peaks() -> dict:
+    """The peak model every achieved-vs-peak gauge divides by: the TPU v5e
+    constants above, overridable per deployment via ``REPRO_PEAK_FLOPS`` /
+    ``REPRO_PEAK_HBM_BW`` / ``REPRO_PEAK_ICI_BW`` (so MFU on other
+    hardware is honest without a code change). Values are FLOP/s and B/s
+    per device."""
+    def _env(name, default):
+        try:
+            v = float(os.environ.get(name, "") or 0)
+        except ValueError:
+            v = 0.0
+        return v if v > 0 else default
+    return {"flops": _env("REPRO_PEAK_FLOPS", PEAK_FLOPS),
+            "hbm_bw": _env("REPRO_PEAK_HBM_BW", HBM_BW),
+            "ici_bw": _env("REPRO_PEAK_ICI_BW", ICI_BW)}
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,

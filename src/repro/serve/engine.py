@@ -43,7 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import telemetry
-from repro.telemetry import trace
+from repro.telemetry import anomaly, profile, trace
 from repro.telemetry.registry import Registry
 from repro.serve import cache as cache_mod
 from repro.serve import sampling as sampling_mod
@@ -236,9 +236,19 @@ class Engine:
         self._top_ps = np.ones((max_slots,), np.float32)
         self._keys = jnp.zeros((max_slots, 2), jnp.uint32)
 
-        self._prefill = jax.jit(self._prefill_fn, donate_argnums=(1,))
-        self._decode = jax.jit(self._decode_fn, donate_argnums=(1,))
+        # first dispatch captures cost_analysis (lower() shares the jit
+        # trace cache, so trace_counts still sees exactly one trace) and
+        # records the blocked compile time as compile/serve_* gauges
+        self._prefill = profile.instrument(
+            "serve/prefill_chunk",
+            jax.jit(self._prefill_fn, donate_argnums=(1,)))
+        self._decode = profile.instrument(
+            "serve/decode_step",
+            jax.jit(self._decode_fn, donate_argnums=(1,)))
         self._sample_prefill = jax.jit(self._sample_prefill_fn)
+        self._prefill_warm = False  # first chunk dispatch is the compile
+        self._det_step = anomaly.StreamDetector(
+            "serve/step_time", registry=self.stats.registry)
 
     # -- traced steps -------------------------------------------------------
 
@@ -338,9 +348,15 @@ class Engine:
                 valid = len(sl)
                 if valid < C:
                     sl = np.pad(sl, (0, C - valid))
+                t_c = time.perf_counter()
                 self.pool, logits = self._prefill(
                     self.params, self.pool, jnp.asarray(sl[None]),
                     jnp.int32(slot), jnp.int32(c), jnp.int32(valid))
+                if self._prefill_warm:
+                    profile.observe("serve/prefill_chunk",
+                                    time.perf_counter() - t_c)
+                else:
+                    self._prefill_warm = True
             tok, k_next = self._sample_prefill(
                 logits, jnp.int32(valid),
                 jnp.float32(req.sampling.temperature),
@@ -383,6 +399,9 @@ class Engine:
                 jnp.asarray(self._top_ps), self._keys)
             tok = np.asarray(tok)                     # sync point
         dt = time.perf_counter() - t0
+        if self.stats.steps > 0:     # step 0 is the compile dispatch
+            profile.observe("serve/decode_step", dt)
+            self._det_step.observe(dt)
         self.sched.record_step(tok)
         self._account_finished()
         self.stats.record_decode(n_active, dt)
@@ -399,5 +418,7 @@ class Engine:
         reset: compile-once is a property of the engine's lifetime."""
         telemetry.detach_registry(self.stats.registry)
         self.stats = EngineStats()
+        self._det_step = anomaly.StreamDetector(
+            "serve/step_time", registry=self.stats.registry)
         if telemetry.enabled():
             telemetry.attach_registry(self.stats.registry)

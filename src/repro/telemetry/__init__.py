@@ -18,6 +18,7 @@ cost is one flag test (pinned <1% step time by
 ``benchmarks/bench_telemetry.py``).
 """
 from repro.telemetry import metrics, trace
+from repro.telemetry import anomaly, profile
 from repro.telemetry._runtime import (TelemetryConfig, add_sink,
                                       attach_registry, config, configure,
                                       default_registry, detach_registry,
@@ -28,17 +29,18 @@ from repro.telemetry.registry import (ConsoleSink, Counter, Gauge,
                                       MemorySink, NOOP, Registry,
                                       TIME_BUCKETS, exp_buckets)
 from repro.telemetry.schema import (SCHEMA_VERSION, run_context, run_record,
-                                    validate_bench_json,
+                                    validate_bench_json, validate_bench_obj,
                                     validate_metrics_jsonl, validate_record,
                                     validate_trace)
 
 __all__ = [
-    "metrics", "trace",
+    "metrics", "trace", "anomaly", "profile",
     "TelemetryConfig", "add_sink", "attach_registry", "config", "configure",
     "default_registry", "detach_registry", "dump_metrics", "enabled",
     "flush", "reset", "set_enabled",
     "ConsoleSink", "Counter", "Gauge", "Histogram", "Info", "JsonlSink",
     "MemorySink", "NOOP", "Registry", "TIME_BUCKETS", "exp_buckets",
     "SCHEMA_VERSION", "run_context", "run_record", "validate_bench_json",
-    "validate_metrics_jsonl", "validate_record", "validate_trace",
+    "validate_bench_obj", "validate_metrics_jsonl", "validate_record",
+    "validate_trace",
 ]

@@ -29,8 +29,12 @@ class TelemetryConfig:
     """Opt-in knobs beyond the on/off switch. ``grad_norm`` adds a global
     gradient-norm to the train-step metrics — an *in-graph* op, so it is
     off by default (the host-side-only rule) and only honored when a user
-    asks (env ``REPRO_TELEMETRY_GRADNORM=1`` or ``configure``)."""
+    asks (env ``REPRO_TELEMETRY_GRADNORM=1`` or ``configure``).
+    ``profile`` gates per-program cost attribution
+    (:mod:`repro.telemetry.profile`) — default on, host-side only; env
+    ``REPRO_TELEMETRY_PROFILE=0`` turns just the attribution off."""
     grad_norm: bool = False
+    profile: bool = True
 
 
 class _State:
@@ -40,7 +44,9 @@ class _State:
         self.extra: list = []          # (registry) attached for export
         self.config = TelemetryConfig(
             grad_norm=os.environ.get("REPRO_TELEMETRY_GRADNORM", "0")
-            not in ("0", ""))
+            not in ("0", ""),
+            profile=os.environ.get("REPRO_TELEMETRY_PROFILE", "1")
+            not in ("0", "off", "false"))
 
 
 _state = _State()
@@ -86,7 +92,8 @@ def add_sink(sink) -> None:
 
 def configure(metrics_out: str | None = None,
               console_every: float | None = None,
-              grad_norm: bool | None = None) -> None:
+              grad_norm: bool | None = None,
+              profile: bool | None = None) -> None:
     """Launcher-facing setup: attach a JSONL sink and/or a periodic console
     summary to the default registry, set opt-in knobs."""
     if metrics_out:
@@ -95,6 +102,8 @@ def configure(metrics_out: str | None = None,
         add_sink(ConsoleSink(every_s=console_every))
     if grad_norm is not None:
         _state.config.grad_norm = bool(grad_norm)
+    if profile is not None:
+        _state.config.profile = bool(profile)
 
 
 def flush(force: bool = False) -> None:
@@ -104,6 +113,8 @@ def flush(force: bool = False) -> None:
     reg = _state.registry
     if not reg._sinks:
         return
+    from repro.telemetry import profile
+    profile.emit(reg)       # refresh per-program attribution gauges
     import time
     records = []
     for r in all_registries():
@@ -118,7 +129,9 @@ def dump_metrics(path: str, extra=()) -> None:
     registries as schema'd JSONL with a leading run record."""
     import json
 
+    from repro.telemetry import profile
     from repro.telemetry.schema import run_record
+    profile.emit(_state.registry)
     regs = all_registries() + [r for r in extra
                                if r not in all_registries()]
     with open(path, "w") as f:
@@ -130,9 +143,11 @@ def dump_metrics(path: str, extra=()) -> None:
 
 def reset() -> None:
     """Drop all recorded state (tests). Keeps the enabled flag."""
+    from repro.telemetry import profile
     _state.registry.close()
     _state.registry = Registry()
     _state.extra = []
+    profile.reset()
 
 
 __all__ = ["enabled", "set_enabled", "config", "configure",

@@ -100,6 +100,14 @@ def validate_record(rec, where: str = "record") -> list:
         bounds, counts = rec.get("bounds"), rec.get("counts")
         if not isinstance(bounds, list) or not isinstance(counts, list):
             _err(errs, where, "histogram without bounds/counts lists")
+        elif not all(isinstance(b, (int, float)) and not isinstance(b, bool)
+                     for b in bounds):
+            # guard before sorted(): a str/None bound must be a diagnostic,
+            # not a TypeError out of the validator
+            _err(errs, where, "non-numeric histogram bounds")
+        elif not all(isinstance(c, int) and not isinstance(c, bool)
+                     for c in counts):
+            _err(errs, where, "non-integer histogram counts")
         else:
             if len(counts) != len(bounds) + 1:
                 _err(errs, where, f"len(counts)={len(counts)} != "
@@ -150,12 +158,17 @@ def validate_trace(path: str) -> list:
             return [f"{path}: bad json: {e}"]
     if not isinstance(obj, dict) or "traceEvents" not in obj:
         return [f"{path}: not a Chrome trace (no traceEvents)"]
+    events = obj["traceEvents"]
+    if not isinstance(events, list):
+        return [f"{path}: traceEvents is not a list "
+                f"({type(events).__name__})"]
     other = obj.get("otherData", {})
     if other.get("schema_version") != SCHEMA_VERSION:
         _err(errs, path, "otherData.schema_version missing/stale")
     if "backend" not in other.get("run", {}):
         _err(errs, path, "otherData.run context missing")
-    for i, ev in enumerate(obj["traceEvents"]):
+    open_async: dict = {}      # (name, id) -> open 'b' count
+    for i, ev in enumerate(events):
         where = f"{path}:traceEvents[{i}]"
         if not isinstance(ev, dict):
             _err(errs, where, "event is not an object")
@@ -169,28 +182,49 @@ def validate_trace(path: str) -> list:
                 _err(errs, where, f"missing {k!r}")
         if ph == "X" and not isinstance(ev.get("dur"), (int, float)):
             _err(errs, where, "complete event without dur")
-        if ph in ("b", "e") and "id" not in ev:
-            _err(errs, where, "async event without id")
+        if ph in ("b", "e"):
+            if "id" not in ev:
+                _err(errs, where, "async event without id")
+            else:
+                key = (ev.get("name"), ev["id"])
+                if ph == "b":
+                    open_async[key] = open_async.get(key, 0) + 1
+                elif open_async.get(key, 0) <= 0:
+                    _err(errs, where, f"async end before begin for "
+                         f"name={ev.get('name')!r} id={ev['id']!r}")
+                else:
+                    open_async[key] -= 1
+    return errs
+
+
+def validate_bench_obj(obj, where: str = "bench") -> list:
+    """Validate an in-memory BENCH object (what ``benchmarks/run.py``
+    checks *before* writing ``--json``)."""
+    errs: list = []
+    if not isinstance(obj, dict):
+        return [f"{where}: not an object: {type(obj).__name__}"]
+    if obj.get("schema_version") != SCHEMA_VERSION:
+        _err(errs, where, "missing/stale schema_version")
+    if "backend" not in obj.get("run", {}):
+        _err(errs, where, "missing run context")
+    rows = obj.get("rows")
+    if not isinstance(rows, list):
+        _err(errs, where, "missing rows list")
+    else:
+        for i, r in enumerate(rows):
+            if not isinstance(r, dict) or "name" not in r:
+                _err(errs, f"{where}:rows[{i}]", "row without name")
+            elif not isinstance(r.get("us_per_call"), (int, float)):
+                _err(errs, f"{where}:rows[{i}]",
+                     "row without numeric us_per_call")
     return errs
 
 
 def validate_bench_json(path: str) -> list:
     """Validate a ``BENCH_*.json`` artifact written by benchmarks/run.py."""
-    errs: list = []
     with open(path) as f:
         try:
             obj = json.load(f)
         except json.JSONDecodeError as e:
             return [f"{path}: bad json: {e}"]
-    if obj.get("schema_version") != SCHEMA_VERSION:
-        _err(errs, path, "missing/stale schema_version")
-    if "backend" not in obj.get("run", {}):
-        _err(errs, path, "missing run context")
-    rows = obj.get("rows")
-    if not isinstance(rows, list):
-        _err(errs, path, "missing rows list")
-    else:
-        for i, r in enumerate(rows):
-            if not isinstance(r, dict) or "name" not in r:
-                _err(errs, f"{path}:rows[{i}]", "row without name")
-    return errs
+    return validate_bench_obj(obj, path)

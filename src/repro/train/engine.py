@@ -160,6 +160,10 @@ class Engine:
     # telemetry — None when the plan has no explicit exchanger (gspmd
     # lowers its own collectives) or no exchange at all ('none')
     wire: dict | None = None
+    # the engine's jitted programs by attribution name ("train/step", or
+    # "train/local"/"train/sync" for the async plans) — what
+    # ``repro.telemetry.profile`` captures cost analysis for
+    jitted: dict | None = None
 
     def state_shardings(self, state):
         return jax.tree.map(lambda l: getattr(l, "sharding", None), state)
@@ -228,8 +232,13 @@ def build_elastic_programs(plan: TrainPlan, model: Model,
         return init_async_state(model, optimizer, key, k, mesh=mesh,
                                 data_axes=plan.data_axes)
 
-    return ElasticPrograms(plan, mesh, k, jax.jit(local), jax.jit(sync),
-                           init_state, _plan_wire(plan, model, mesh))
+    from repro import telemetry
+    wire = _plan_wire(plan, model, mesh)
+    ilocal = telemetry.profile.instrument("train/local", jax.jit(local))
+    isync = telemetry.profile.instrument(
+        "train/sync", jax.jit(sync),
+        coll_bytes=wire["bytes_per_exchange"] if wire else 0.0)
+    return ElasticPrograms(plan, mesh, k, ilocal, isync, init_state, wire)
 
 
 def build_engine(plan: TrainPlan, model: Model, optimizer: Optimizer,
@@ -253,10 +262,14 @@ def build_engine(plan: TrainPlan, model: Model, optimizer: Optimizer,
             microbatches=plan.microbatches, bucket_bytes=plan.bucket_bytes,
             sharded_update=plan.sharded_update, overlap=plan.overlap,
             grad_norm=telemetry.config().grad_norm))
+        wire = _plan_wire(plan, model, mesh)
+        istep = telemetry.profile.instrument(
+            "train/step", jstep,
+            coll_bytes=wire["bytes_per_step"] if wire else 0.0)
 
         def step(state, batch, rng, step_idx: int = 0):
             del step_idx
-            return jstep(state, batch, rng)
+            return istep(state, batch, rng)
 
         def init_state(key):
             if sharded:
@@ -265,7 +278,8 @@ def build_engine(plan: TrainPlan, model: Model, optimizer: Optimizer,
                     bucket_bytes=plan.bucket_bytes)
             return init_train_state(model, optimizer, key)
 
-        return Engine(plan, init_state, step, _plan_wire(plan, model, mesh))
+        return Engine(plan, init_state, step, wire,
+                      {"train/step": jstep})
 
     if plan.is_async:
         ex = get_exchanger(plan.exchanger)
@@ -275,18 +289,24 @@ def build_engine(plan: TrainPlan, model: Model, optimizer: Optimizer,
             alpha=plan.alpha, data_axes=plan.data_axes, sum_fn=sum_fn,
             bucket_bytes=plan.bucket_bytes)
         jlocal, jsync = jax.jit(local), jax.jit(sync)
+        wire = _plan_wire(plan, model, mesh)
+        ilocal = telemetry.profile.instrument("train/local", jlocal)
+        isync = telemetry.profile.instrument(
+            "train/sync", jsync,
+            coll_bytes=wire["bytes_per_exchange"] if wire else 0.0)
 
         def step(state, batch, rng, step_idx: int = 0):
             # tau is structural: non-averaging steps run a program with no
             # param-sized collective at all
-            fn = jsync if (int(step_idx) + 1) % plan.tau == 0 else jlocal
+            fn = isync if (int(step_idx) + 1) % plan.tau == 0 else ilocal
             return fn(state, batch, rng)
 
         def init_state(key):
             return init_async_state(model, optimizer, key, k, mesh=mesh,
                                     data_axes=plan.data_axes)
 
-        return Engine(plan, init_state, step, _plan_wire(plan, model, mesh))
+        return Engine(plan, init_state, step, wire,
+                      {"train/local": jlocal, "train/sync": jsync})
 
     # gspmd
     abs_state = jax.eval_shape(
@@ -303,14 +323,15 @@ def build_engine(plan: TrainPlan, model: Model, optimizer: Optimizer,
         return new_state, metrics
 
     jstep = jax.jit(constrained)
+    istep = telemetry.profile.instrument("train/step", jstep)
 
     def step(state, batch, rng, step_idx: int = 0):
         del step_idx
         batch = jax.device_put(batch, batch_shardings(mesh, batch))
-        return jstep(state, batch, rng)
+        return istep(state, batch, rng)
 
     def init_state(key):
         return jax.device_put(init_train_state(model, optimizer, key),
                               state_sh)
 
-    return Engine(plan, init_state, step)
+    return Engine(plan, init_state, step, None, {"train/step": jstep})

@@ -53,8 +53,12 @@ from repro.checkpoint.ckpt import restore_for_resume, save_checkpoint
 from repro.models.registry import Model
 from repro.optim.optimizers import Optimizer
 from repro.roofline.analysis import model_flops_6nd
-from repro.telemetry import metrics, trace
+from repro.telemetry import anomaly, metrics, profile, trace
 from repro.train.engine import TrainPlan, build_engine
+
+# exchange-half micro-timing materializes one (k, ...) zero-gradient stack;
+# skip it beyond this size (the cost capture via lower() still happens)
+_HALF_TIMING_CAP_BYTES = 256 << 20
 
 # when logging is off, losses still move to host in bounded windows (a long
 # run must not accumulate one device scalar per step)
@@ -99,6 +103,62 @@ def _device_mem_bytes():
     if not stats:
         return None
     return stats.get("bytes_in_use")
+
+
+def _profile_exchange_halves(model: Model, plan: TrainPlan, mesh) -> None:
+    """Per-half exchange attribution: standalone jitted RS/AG programs
+    (``exchanger.half_programs``) are lowered for cost analysis and — when
+    the gradient stack is small enough — micro-timed on zeros so the
+    profile carries measured achieved-bandwidth for each half. Collective
+    bytes come from the analytic ``wire_summary`` (same numbers as
+    ``exchange/bytes_per_step``). Never raises into the train loop."""
+    import time as _time
+
+    import numpy as np
+
+    from repro.core.exchanger import (get_exchanger, half_programs,
+                                      wire_summary)
+    try:
+        ex = get_exchanger(plan.exchanger)
+        if ex.kind == "none":
+            return
+        axis = plan.data_axes[-1]
+        params_abs = jax.eval_shape(model.init, jax.random.key(0))
+        rs_fn, ag_fn, grads_abs, shards_abs, rsplan = half_programs(
+            ex, params_abs, mesh, axis=axis,
+            bucket_bytes=plan.bucket_bytes)
+        ws = wire_summary(ex, rsplan,
+                          param_ag=bool(plan.sharded_update or plan.overlap))
+        profile.capture("exchange/rs", rs_fn, grads_abs,
+                        coll_bytes=ws["rs_bytes"])
+        if shards_abs:
+            profile.capture("exchange/ag", ag_fn, shards_abs,
+                            coll_bytes=ws["ag_bytes"])
+        stack_bytes = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                          for l in jax.tree.leaves(grads_abs))
+        if stack_bytes > _HALF_TIMING_CAP_BYTES:
+            return
+        import jax.numpy as jnp
+        grads = jax.tree.map(lambda l: jnp.zeros(l.shape, l.dtype),
+                             grads_abs)
+        shards = [jnp.zeros(l.shape, l.dtype) for l in shards_abs]
+        for name, fn, args in (("exchange/rs", rs_fn, grads),
+                               ("exchange/ag", ag_fn, shards)):
+            if not args and name == "exchange/ag":
+                continue
+            t0 = _time.perf_counter()
+            out = fn(args)
+            jax.block_until_ready(out)
+            profile.compile_time(name, _time.perf_counter() - t0)
+            for _ in range(2):
+                t0 = _time.perf_counter()
+                out = fn(args)
+                jax.block_until_ready(out)
+                profile.observe(name, _time.perf_counter() - t0)
+    except Exception as e:  # noqa: BLE001 — attribution never breaks training
+        metrics.counter("profile/capture_errors").inc()
+        trace.instant("profile/exchange_halves_error",
+                      error=f"{type(e).__name__}: {e}")
 
 
 def train(model: Model, optimizer: Optimizer, lr_fn, mesh, batches, *,
@@ -162,6 +222,11 @@ def train(model: Model, optimizer: Optimizer, lr_fn, mesh, batches, *,
         metrics.gauge("exchange/bytes_per_step").set(wire["bytes_per_step"])
     n_params = _count_params(model)
     peak_flops = float(os.environ.get("REPRO_PEAK_FLOPS", "0") or 0)
+    # step-time anomaly watch: spikes (robust-z vs a rolling median/MAD
+    # window) and sustained regressions (fast-vs-slow EWMA) land as
+    # anomaly/* counters + trace instants
+    det_step = anomaly.StreamDetector("train/step_time")
+    seen_progs: set = set()
 
     report = TrainReport()
     report.steps = start_step
@@ -200,6 +265,13 @@ def train(model: Model, optimizer: Optimizer, lr_fn, mesh, batches, *,
         n_examples += b_ex
         n_tokens += b_tok
         first_step = i == start_step
+        # which jitted program this iteration dispatched (the async loop
+        # alternates local/sync on the host-side step index)
+        if plan.is_async:
+            prog = ("train/sync" if (i + 1) % plan.tau == 0
+                    else "train/local")
+        else:
+            prog = "train/step"
         if first_step:
             # the first step carries compilation: block so its cost lands
             # here (one extra sync for the whole run) and keep it out of
@@ -207,6 +279,10 @@ def train(model: Model, optimizer: Optimizer, lr_fn, mesh, batches, *,
             with trace.span("train/compile_block"):
                 jax.block_until_ready(device_losses[-1])
             report.compile_time = time.perf_counter() - t_step0
+            seen_progs.add(prog)
+            if profile.enabled() and wire:
+                with trace.span("profile/exchange_halves"):
+                    _profile_exchange_halves(model, plan, mesh)
             t_steady0 = time.perf_counter()
             steady_base_ex, steady_base_tok = n_examples, n_tokens
         c_steps.inc()
@@ -216,7 +292,19 @@ def train(model: Model, optimizer: Optimizer, lr_fn, mesh, batches, *,
             c_wire.inc(wire["bytes_per_step"])
         h_data.observe(t_step0 - t_iter0)
         if not first_step:
-            h_step.observe(time.perf_counter() - t_iter0)
+            t_now = time.perf_counter()
+            h_step.observe(t_now - t_iter0)
+            # join measured duration into the program's profile — under
+            # async dispatch the loop's backpressure amortizes device time
+            # into these iteration figures (same caveat as h_step). Each
+            # program's own first dispatch is its compiling call
+            # (train/sync first fires at step tau-1) — keep it out of the
+            # per-program mean like the first step stays out of h_step.
+            if prog in seen_progs:
+                profile.observe(prog, t_now - t_step0)
+            else:
+                seen_progs.add(prog)
+            det_step.observe(t_now - t_step0)
         if log_every and (i % log_every == 0 or i == num_steps - 1):
             with trace.span("train/flush", step=i):
                 t_f = time.perf_counter()
