@@ -1,35 +1,63 @@
-"""Serving benchmark: continuous batching vs the static-batch reference.
+"""Serving benchmark: continuous batching, paged-cache density, and
+prefix-cache TTFT vs the static/contiguous references.
 
-A mixed workload (Poisson prompt lengths, strongly bimodal output lengths
-— the shape real traffic has) is served two ways with the *same* compiled
-decode step:
+A mixed workload (Poisson prompt lengths, strongly bimodal output lengths,
+and a shared-prefix request class — the shape real traffic has: most
+requests carry a common system-prompt head) is served several ways with
+the *same* compiled decode step:
 
 - ``static``     : requests grouped FIFO into batches of ``max_slots``;
                    each group runs until its longest member finishes
                    (finished lanes idle — classic static batching)
 - ``continuous`` : all requests queued at once; finished lanes are evicted
                    mid-flight and refilled from the queue
+- ``paged``      : the page-pool engine at a *fixed cache HBM budget* —
+                   the rows that provision N contiguous worst-case slots
+                   re-cut into pages host 2N+ concurrent slots, because
+                   admission reserves what a request actually needs, not
+                   ``max_seq``
+- ``prefix``     : shared-prefix requests served twice — cold (pages
+                   computed) then warm (pages reused by refcount) — the
+                   hashed-prefix-cache TTFT win
 
 Useful-token throughput (only requested tokens count) and per-token
 latency percentiles come from the engine's step clock. The decode step
 must compile exactly once across all the churn — the ``compiles`` field
-in the derived column is the recompile regression guard.
+in the derived column is the recompile regression guard; the density and
+prefix rows gate ``slots_speedup`` / ``hit_frac`` / ``ttft_speedup``
+through the same tolerance machinery.
 
 Rows:
-- serve/continuous : steady-state tok/s + p50/p99 per-token latency
-- serve/static     : same for the static-batch reference
-- serve/speedup    : continuous over static (the >= 1.5x acceptance bar)
-- serve/prefill    : chunked prefill throughput (tok/s)
+- serve/continuous    : steady-state tok/s + p50/p99 per-token latency
+- serve/static        : same for the static-batch reference
+- serve/speedup       : continuous over static (the >= 1.5x acceptance bar)
+- serve/prefill       : chunked prefill throughput (tok/s)
+- serve/ttft          : submit -> first-token percentiles + queue waits
+- serve/paged_density : concurrent slots at fixed cache rows, paged over
+                        contiguous (the >= 2x acceptance bar) + useful
+                        tok/s at that density
+- serve/prefix_ttft   : warm-over-cold TTFT speedup + prompt fraction
+                        served from cache on the warm pass
 """
 import numpy as np
 
+_PREFIX_LEN = 16   # shared head (page-aligned at page_size 8/16)
+
 
 def _workload(n_req: int, vocab: int, seed: int = 0):
+    """Mixed traffic: Poisson prompts, bimodal outputs, and every fourth
+    request carrying the same ``_PREFIX_LEN``-token head (system-prompt
+    class) over a unique tail."""
     rng = np.random.RandomState(seed)
     lens = np.maximum(1, rng.poisson(8, n_req))
     news = np.where(np.arange(n_req) % 2 == 0, 4, 32)   # bimodal outputs
-    prompts = [rng.randint(0, vocab, size=int(n)).tolist() for n in lens]
-    return prompts, news, int((lens + news).max())
+    shared = rng.randint(0, vocab, size=_PREFIX_LEN).tolist()
+    prompts = []
+    for i, n in enumerate(lens):
+        body = rng.randint(0, vocab, size=int(n)).tolist()
+        prompts.append(shared + body if i % 4 == 0 else body)
+    need = int(max(len(p) + int(m) for p, m in zip(prompts, news)))
+    return prompts, news, need
 
 
 def _serve(eng, prompts, news, *, continuous: bool, slots: int):
@@ -50,6 +78,20 @@ def _serve(eng, prompts, news, *, continuous: bool, slots: int):
     return time.perf_counter() - t0, rids
 
 
+def _run_peak(eng, prompts, news):
+    """Drive to completion tracking peak concurrent active slots."""
+    import time
+    from repro.serve import SamplingParams
+    for p, m in zip(prompts, news):
+        eng.submit(p, int(m), SamplingParams())
+    peak = 0
+    t0 = time.perf_counter()
+    while eng.sched.has_work():
+        eng.step()
+        peak = max(peak, eng.sched.num_active)
+    return time.perf_counter() - t0, peak
+
+
 def run(quick: bool = False):
     import jax
     from repro.configs import get_smoke_config
@@ -66,10 +108,10 @@ def run(quick: bool = False):
     chunk = 16
     kw = dict(max_slots=slots, max_seq=need, prefill_chunk=chunk)
 
-    def make_engine():
+    def make_engine(**over):
         # jit caches are per-instance: warm each engine (compile prefill/
         # decode/sample at the measurement shapes), then zero its clock
-        eng = Engine(model, params, **kw)
+        eng = Engine(model, params, **{**kw, **over})
         eng.submit(prompts[0], 2, SamplingParams())
         eng.run()
         eng.reset_stats()
@@ -113,6 +155,58 @@ def run(quick: bool = False):
                  f"queue_p50_ms={qw[50] * 1e3:.2f};"
                  f"queue_p99_ms={qw[99] * 1e3:.2f};"
                  f"admitted={st.admissions};evicted={st.evictions}"))
+
+    # --- paged density at fixed cache HBM -------------------------------
+    # Provision the contiguous pool worst-case (max_seq=256 per slot, the
+    # way a static server must) and count its cache rows; give the paged
+    # engine exactly those rows as pages and twice the slots. Every
+    # request in this workload uses far less than 256 rows, so admission
+    # reservations let all 2N lanes fill — the density win the page pool
+    # exists for.
+    provision = 256
+    page = 16
+    eng_base = make_engine(max_seq=provision, page_size=0)
+    cache_rows = slots * eng_base.max_seq
+    dt_b, peak_b = _run_peak(eng_base, prompts, news)
+    eng_p = make_engine(max_seq=provision, page_size=page,
+                        max_slots=2 * slots,
+                        num_pages=cache_rows // page + 1)   # +1: null page
+    dt_p, peak_p = _run_peak(eng_p, prompts, news)
+    rows.append((f"serve/paged_density/{arch}", dt_p / useful * 1e6,
+                 f"slots_speedup={peak_p / max(peak_b, 1):.2f};"
+                 f"peak_active={peak_p};cache_rows={cache_rows};"
+                 f"tok_s={useful / dt_p:.1f};"
+                 f"page_occupancy={eng_p.allocator.occupancy():.3f};"
+                 f"compiles={eng_p.trace_counts['decode']}"))
+
+    # --- prefix-cache TTFT: cold pages vs refcounted reuse --------------
+    # One long shared prompt served cold (pages computed + published),
+    # then the same prompt class served warm: admission installs the hit
+    # pages and prefill runs only the unseen tail (a full hit re-runs one
+    # token for its logits). TTFT drops by roughly the prompt/chunk count.
+    rng = np.random.RandomState(7)
+    head = rng.randint(0, cfg.vocab_size, size=48).tolist()   # 3 chunks
+    tails = [rng.randint(0, cfg.vocab_size, size=8).tolist()
+             for _ in range(4)]
+    eng_x = make_engine(max_seq=128, page_size=page)
+    for t in [[]] + tails[:1]:        # cold: head and head+tail once each
+        eng_x.submit(head + t, 4, SamplingParams())
+        eng_x.run()
+    cold = eng_x.stats.ttft_percentiles()[50]
+    hit0 = eng_x.allocator.hit_tokens
+    eng_x.reset_stats()
+    warm_prompts = [head] + [head + t for t in tails]
+    warm_tok = sum(len(p) for p in warm_prompts)
+    for p in warm_prompts:            # warm: every head page is cached
+        eng_x.submit(p, 4, SamplingParams())
+        eng_x.run()
+    warm = eng_x.stats.ttft_percentiles()[50]
+    hit_tok = eng_x.allocator.hit_tokens - hit0
+    rows.append((f"serve/prefix_ttft/{arch}", warm * 1e6,
+                 f"ttft_speedup={cold / max(warm, 1e-9):.2f};"
+                 f"hit_frac={hit_tok / warm_tok:.3f};"
+                 f"cow_copies={eng_x.allocator.cow_copies};"
+                 f"compiles={eng_x.trace_counts['decode']}"))
     return rows
 
 

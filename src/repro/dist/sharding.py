@@ -260,10 +260,16 @@ def batch_shardings(mesh, batch):
     return jax.tree.map(leaf, batch)
 
 
-def cache_shardings(mesh, cache, global_batch: int):
+def cache_shardings(mesh, cache, global_batch: int,
+                    page_batch: int | None = None):
     """Decode-cache shardings: batch dim over data axes, head-like dims over
     ``model`` (KV heads for GQA k/v, the latent for MLA ckv, SSM heads for
-    recurrent state); conv windows and rope keys replicated."""
+    recurrent state); conv windows and rope keys replicated.
+
+    ``page_batch``: page count of a paged serve pool — attention leaves
+    there carry (layers, num_pages, page_size, ...) instead of a slot
+    batch dim, and the page dim shards over the data axes exactly like the
+    slot dim does (pages are the unit of cache parallelism)."""
     dpe = _dp_entry(mesh)
 
     def leaf(path, l):
@@ -272,7 +278,8 @@ def cache_shardings(mesh, cache, global_batch: int):
         entries = [None] * l.ndim
         if dpe is not None:
             for i, s in enumerate(l.shape):
-                if s == global_batch:
+                if s == global_batch or (page_batch is not None
+                                         and s == page_batch):
                     entries[i] = dpe
                     break
         if not _REPLICATE_ATTN:

@@ -468,10 +468,123 @@ def flash_decode(q, k, v, pos, *, window=0, sm_scale=None,
                    jax.ShapeDtypeStruct((B, KV, ns, G, Dv), jnp.float32)],
         interpret=interpret,
     )(pos, window, q, k, v)
-    # online-softmax combine across the independent KV splits
+    return _combine_kv_splits(m, l, acc).astype(q.dtype)
+
+
+def _combine_kv_splits(m, l, acc):
+    """Online-softmax combine across independent KV splits: partials
+    m/l (B, KV, ns, G) and acc (B, KV, ns, G, Dv) -> (B, 1, H, Dv) fp32.
+    Shared by the contiguous (``flash_decode``) and paged
+    (``flash_decode_paged``) split-KV kernels — a dead split's neutral
+    partial (m=NEG_INF, l=0, acc=0) drops out exactly."""
+    B, KV, _, G = m.shape
+    Dv = acc.shape[-1]
     m_g = jnp.max(m, axis=2, keepdims=True)                  # (B,KV,1,G)
     alpha = jnp.exp(m - m_g)
     l_g = jnp.sum(alpha * l, axis=2)                         # (B,KV,G)
     out = jnp.sum(alpha[..., None] * acc, axis=2)            # (B,KV,G,Dv)
     out = out / jnp.maximum(l_g, 1e-30)[..., None]
-    return out.reshape(B, 1, H, Dv).astype(q.dtype)
+    return out.reshape(B, 1, KV * G, Dv)
+
+
+def _decode_paged_kernel(tbl_ref, pos_ref, win_ref, q_ref, k_ref, v_ref,
+                         m_ref, l_ref, acc_ref, *, sm_scale, page_size,
+                         groups):
+    del tbl_ref                 # consumed by the BlockSpec index_maps
+    b, j = pl.program_id(0), pl.program_id(2)
+    pos = pos_ref[b]
+    win = win_ref[0]
+    m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # page j holds logical rows [j*ps, (j+1)*ps); same liveness pruning as
+    # the contiguous split-KV kernel with block_k = page_size
+    @pl.when(_tile_live(0, j, pos, win, 1, page_size))
+    def _compute():
+        q = q_ref[...].reshape(groups, q_ref.shape[-1])
+        k = k_ref[...].reshape(page_size, k_ref.shape[-1])
+        v = v_ref[...].reshape(page_size, v_ref.shape[-1])
+        s = _dot(q, k, trans_b=True) * sm_scale          # (G, ps)
+        c = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        kpos = j * page_size + c
+        keep = kpos <= pos
+        keep &= (win <= 0) | (pos - kpos < win)
+        s = jnp.where(keep, s, NEG_INF)
+        m = jnp.max(s, axis=1, keepdims=True)
+        p = jnp.where(keep, jnp.exp(s - m), 0.0)
+        m_ref[...] = jnp.broadcast_to(m[:, 0].reshape(m_ref.shape),
+                                      m_ref.shape)
+        l_ref[...] = jnp.sum(p, axis=1).reshape(l_ref.shape)
+        acc_ref[...] = _dot(p.astype(v.dtype), v).reshape(acc_ref.shape)
+
+
+def flash_decode_paged(q, k_pages, v_pages, tables, pos, *, page_size: int,
+                       window=0, sm_scale=None,
+                       interpret: bool | None = None):
+    """Split-KV decode over a *paged* cache: the grid's chunk axis walks
+    each slot's block table one page per chunk, and the K/V BlockSpec
+    index_maps read the physical page id from the scalar-prefetched table
+    (``pltpu.PrefetchScalarGridSpec``), so page fetch is table-indexed
+    inside the kernel — no gathered lane ever materializes in HBM. The
+    compiled program is one trace for any table contents (tables/pos enter
+    as same-shaped int32 inputs), preserving the engine's compile-once
+    guarantee under request churn.
+
+    q: (B, 1, H, Dk); k_pages/v_pages: (P, page_size, KV, Dk/Dv) physical
+    pages; tables: (B, NP) int32 page ids (logical page j of slot b is
+    physical page tables[b, j]); pos: (B,) per-slot positions. Pages at
+    logical index > pos // page_size are skipped with neutral partials
+    exactly like dead KV chunks in ``flash_decode`` — whatever stale page
+    the table maps there (typically the null page 0) is never read into
+    the combine. Returns (B, 1, H, Dv).
+
+    Math is bit-identical to ``flash_decode(q, gather(k_pages, tables),
+    ..., block_k=page_size)``: same per-page partials, same combine."""
+    B, Sq, H, Dk = q.shape
+    P_, ps, KV, _ = k_pages.shape
+    Dv = v_pages.shape[-1]
+    if Sq != 1:
+        raise ValueError(f"flash_decode_paged wants one query row, Sq={Sq}")
+    if ps != page_size:
+        raise ValueError(f"page dim {ps} != page_size {page_size}")
+    if H % KV:
+        raise ValueError(f"H={H} not divisible by KV={KV}")
+    G = H // KV
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(Dk)
+    interpret = resolve_interpret(interpret)
+    NP = tables.shape[-1]
+    tables = jnp.asarray(tables, jnp.int32).reshape(B, NP)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+    window = jnp.asarray(window, jnp.int32).reshape(1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,       # tables, pos, window
+        grid=(B, KV, NP),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, Dk),
+                         lambda b, h, j, tbl, pv, win: (b, 0, h, 0)),
+            pl.BlockSpec((1, page_size, 1, Dk),
+                         lambda b, h, j, tbl, pv, win: (tbl[b, j], 0, h, 0)),
+            pl.BlockSpec((1, page_size, 1, Dv),
+                         lambda b, h, j, tbl, pv, win: (tbl[b, j], 0, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, G),
+                         lambda b, h, j, tbl, pv, win: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, 1, G),
+                         lambda b, h, j, tbl, pv, win: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, 1, G, Dv),
+                         lambda b, h, j, tbl, pv, win: (b, h, j, 0, 0)),
+        ],
+    )
+    m, l, acc = pl.pallas_call(
+        functools.partial(_decode_paged_kernel, sm_scale=float(sm_scale),
+                          page_size=page_size, groups=G),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, KV, NP, G), jnp.float32),
+                   jax.ShapeDtypeStruct((B, KV, NP, G), jnp.float32),
+                   jax.ShapeDtypeStruct((B, KV, NP, G, Dv), jnp.float32)],
+        interpret=interpret,
+    )(tables, pos, window, q, k_pages, v_pages)
+    return _combine_kv_splits(m, l, acc).astype(q.dtype)

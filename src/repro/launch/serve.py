@@ -41,6 +41,21 @@ def main():
                     help="cache rows per slot (0: auto from workload)")
     ap.add_argument("--prefill-chunk", type=int, default=16,
                     help="prompt tokens prefilled per model call")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV cache page size in tokens (0: contiguous "
+                         "per-slot lanes — the legacy/oracle layout)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="physical pages in the shared KV pool (0: "
+                         "worst-case auto — every slot can reach max_seq; "
+                         "smaller values oversubscribe HBM and gate "
+                         "admission on actual usage)")
+    ap.add_argument("--prefix-cache", dest="prefix_cache",
+                    action="store_true", default=True,
+                    help="hash page-aligned prompt prefixes and serve "
+                         "repeats from shared pages (copy-on-write; "
+                         "attention families only)")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -60,7 +75,8 @@ def main():
     ap.add_argument("--metrics-out", default=None, metavar="JSONL",
                     help="write telemetry metrics (schema'd JSONL: "
                          "prefill/decode throughput, TTFT, queue wait, "
-                         "slot occupancy, admission/eviction counters)")
+                         "page-pool occupancy, prefix hit-rate, COW and "
+                         "admission/eviction counters)")
     ap.add_argument("--trace-out", default=None, metavar="JSON",
                     help="write host-side spans (per-request lifecycle + "
                          "decode dispatches) as Chrome-trace/Perfetto JSON")
@@ -101,7 +117,9 @@ def main():
     max_seq = args.max_seq or int((lens + news).max())
     eng = Engine(model, params, max_slots=args.max_slots, max_seq=max_seq,
                  prefill_chunk=args.prefill_chunk,
-                 fused_sampling=args.fused_sampling)
+                 fused_sampling=args.fused_sampling,
+                 page_size=args.page_size, num_pages=args.num_pages,
+                 prefix_cache=args.prefix_cache)
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p, seed=args.seed)
     rids = [eng.submit(p, int(m), sp) for p, m in zip(prompts, news)]
@@ -122,6 +140,13 @@ def main():
           f"{st.admissions} admitted / {st.evictions} evicted)")
     print(f"decode compiled {eng.trace_counts['decode']}x across "
           f"{st.steps} steps")
+    if eng.allocator is not None:
+        al = eng.allocator
+        print(f"paged cache: {eng.num_pages} pages x {eng.page_size} tok, "
+              f"final occupancy {al.occupancy():.2f}, "
+              f"prefix hit-rate {al.hit_rate():.2f} "
+              f"({al.hit_tokens} tok cached), {al.cow_copies} COW copies, "
+              f"{al.evictions} cache evictions")
     print("sample:", results[rids[0]][:16])
     if args.metrics_out:
         telemetry.dump_metrics(args.metrics_out)

@@ -30,7 +30,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, AttentionConfig
-from repro.kernels.flash_attention import flash_attention, flash_decode
+from repro.kernels.flash_attention import (flash_attention, flash_decode,
+                                           flash_decode_paged)
 from repro.models.common import (apply_rope, dense_init, head_rms_norm)
 
 NEG_INF = -1e30
@@ -171,6 +172,44 @@ def _update_cache_rows(buf, new, pos, pos_vec):
     return jax.vmap(
         lambda b, u, i: jax.lax.dynamic_update_slice_in_dim(b, u, i, axis=0)
     )(buf, new, pos_vec)
+
+
+def _page_coords(pos, page_size: int, num_logical: int):
+    """(logical page, in-page row) for absolute positions. Pages clamp
+    into the table so pad positions past the last logical page scatter
+    into it (or the null page) where masking hides them."""
+    return jnp.clip(pos // page_size, 0, num_logical - 1), pos % page_size
+
+
+def _scatter_page_rows(buf, new, tables, pos_vec, page_size: int):
+    """Write one (B, 1, ...) row per batch element into the paged buffer
+    (P, page_size, ...) through the block table (B, NP). Idle slots map
+    to the null page; their duplicate writes land there harmlessly."""
+    B = new.shape[0]
+    pj, pr = _page_coords(pos_vec, page_size, tables.shape[1])
+    pid = tables[jnp.arange(B), pj]
+    return buf.at[pid, pr].set(new[:, 0].astype(buf.dtype))
+
+
+def _scatter_chunk_rows(buf, new, tables, positions, page_size: int):
+    """Scatter a (B, C, ...) prefill chunk into the paged buffer through
+    each row's block table. ``positions`` (B, C) absolute — any alignment
+    (prefix-cache resume starts mid-stream); rows whose page the table
+    maps to 0 write the null page (pad tails), exactly the garbage-row
+    contract the contiguous path has beyond ``valid``."""
+    B, C = new.shape[:2]
+    pj, pr = _page_coords(positions, page_size, tables.shape[1])
+    pid = jnp.take_along_axis(tables, pj, axis=1)            # (B, C)
+    flat = new.reshape((B * C,) + new.shape[2:]).astype(buf.dtype)
+    return buf.at[pid.reshape(-1), pr.reshape(-1)].set(flat)
+
+
+def _gather_lane(buf, tables):
+    """(B, NP*page_size, ...) virtual contiguous lanes gathered from the
+    paged buffer — the ref-impl read path (bit-identical rows to a
+    contiguous pool lane wherever the lane was actually written)."""
+    pages = buf[tables]                                      # (B, NP, ps, ...)
+    return pages.reshape((tables.shape[0], -1) + buf.shape[2:])
 
 
 def _masked_softmax(scores, keep):
@@ -315,9 +354,15 @@ def gqa_init_cache(batch: int, max_len: int, a: AttentionConfig, dtype):
 
 
 def gqa_decode(p, cache, x, pos, a: AttentionConfig, window: int,
-               impl: str | None = None):
+               impl: str | None = None, tables=None, page_size: int = 0):
     """One-token decode. x:(B,1,d); pos: scalar int (current index) or a
     (B,) vector of per-sequence indices (serving engine slots).
+
+    ``tables`` (B, NP) int32 switches the cache to the paged layout
+    (cache leaves are (P, page_size, ...) physical pages): the new row
+    scatters through the table, flash reads fetch pages tile-wise inside
+    ``flash_decode_paged``, and the ref path gathers the virtual lane —
+    identical math to the contiguous layout on the gathered rows.
 
     Returns (out, new_cache)."""
     impl = impl or resolve_attn_impl(a)
@@ -327,10 +372,24 @@ def gqa_decode(p, cache, x, pos, a: AttentionConfig, window: int,
     posv, pos_vec = _decode_pos(pos, x.shape[0])
     q = apply_rope(q, posv, a.rope_theta)
     k = apply_rope(k, posv, a.rope_theta)
+    B = x.shape[0]
+    if tables is not None:
+        pv = posv[:, 0]
+        ck = _scatter_page_rows(cache["k"], k, tables, pv, page_size)
+        cv = _scatter_page_rows(cache["v"], v, tables, pv, page_size)
+        if impl == "flash":
+            out = flash_decode_paged(q, ck, cv, tables, pv,
+                                     page_size=page_size, window=window)
+        else:
+            lk, lv = _gather_lane(ck, tables), _gather_lane(cv, tables)
+            keep = decode_keep_batched(jnp.arange(lk.shape[1]), pv,
+                                       window)[:, None, :]
+            out = gqa_attend(q, lk, lv, keep, a)
+        y = jnp.einsum("bsf,fd->bsd", out.reshape(B, 1, -1), p["wo"])
+        return y, {"k": ck, "v": cv}
     ck = _update_cache_rows(cache["k"], k, pos, pos_vec)
     cv = _update_cache_rows(cache["v"], v, pos, pos_vec)
     S = ck.shape[1]
-    B = x.shape[0]
     if impl == "flash":
         out = flash_decode(q, ck, cv,
                            pos_vec if pos_vec is not None else pos,
@@ -347,32 +406,44 @@ def gqa_decode(p, cache, x, pos, a: AttentionConfig, window: int,
 
 
 def gqa_prefill(p, cache, x, positions, pos0, a: AttentionConfig,
-                window: int, impl: str | None = None):
+                window: int, impl: str | None = None, tables=None,
+                page_size: int = 0):
     """Chunked prompt prefill: attend a whole (B,C,d) chunk against the
     cache and write its K/V rows at [pos0, pos0+C) in one pass.
 
     ``positions`` (B,C) are absolute positions (pos0 + arange(C)); rows
     beyond the valid prompt length write pad garbage that is masked out of
-    every later read (causality) and overwritten by the decode steps."""
+    every later read (causality) and overwritten by the decode steps.
+
+    ``tables`` (B, NP) switches to the paged cache layout: chunk rows
+    scatter through the block table (any pos0 alignment — prefix-cache
+    resume and the 1-token full-hit re-prefill both land mid-page) and
+    the chunk attends the gathered virtual lane."""
     impl = impl or resolve_attn_impl(a)
     q, k, v = _project_qkv(p, x, a)
     if a.qk_norm:
         q, k = head_rms_norm(q), head_rms_norm(k)
     q = apply_rope(q, positions, a.rope_theta)
     k = apply_rope(k, positions, a.rope_theta)
-    ck = jax.lax.dynamic_update_slice_in_dim(
-        cache["k"], k.astype(cache["k"].dtype), pos0, axis=1)
-    cv = jax.lax.dynamic_update_slice_in_dim(
-        cache["v"], v.astype(cache["v"].dtype), pos0, axis=1)
-    S = ck.shape[1]
     B, C = x.shape[:2]
+    if tables is not None:
+        ck = _scatter_chunk_rows(cache["k"], k, tables, positions, page_size)
+        cv = _scatter_chunk_rows(cache["v"], v, tables, positions, page_size)
+        lane_k, lane_v = _gather_lane(ck, tables), _gather_lane(cv, tables)
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), pos0, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), pos0, axis=1)
+        lane_k, lane_v = ck, cv
+    S = lane_k.shape[1]
     if impl == "flash":
         # q-chunk x full-cache tiles; rows start at the chunk origin
-        out = flash_attention(q, ck, cv, q_off=positions[:, 0],
+        out = flash_attention(q, lane_k, lane_v, q_off=positions[:, 0],
                               window=window)
     else:
         keep = causal_window_mask(positions[0], jnp.arange(S), window)
-        out = gqa_attend(q, ck, cv, keep, a)
+        out = gqa_attend(q, lane_k, lane_v, keep, a)
     y = jnp.einsum("bsf,fd->bsd", out.reshape(B, C, -1), p["wo"])
     return y, {"k": ck, "v": cv}
 
@@ -442,9 +513,14 @@ def mla_init_cache(batch: int, max_len: int, a: AttentionConfig, dtype):
     }
 
 
-def mla_decode(p, cache, x, pos, a: AttentionConfig, window: int):
+def mla_decode(p, cache, x, pos, a: AttentionConfig, window: int,
+               tables=None, page_size: int = 0):
     """Absorbed-matmul MLA decode: attends in the 512-d latent space.
-    ``pos`` may be a scalar or a (B,) per-sequence vector."""
+    ``pos`` may be a scalar or a (B,) per-sequence vector. ``tables``
+    switches to paged latent/rope-key caches ((P, page_size, R/rope)):
+    row writes scatter through the block table and attention runs on the
+    gathered virtual lanes — the absorbed einsum path is already the
+    memory-lean kernel here, so there is no separate flash variant."""
     B = x.shape[0]
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     q_nope, q_rope = jnp.split(q, [a.qk_nope_dim], axis=-1)
@@ -456,30 +532,40 @@ def mla_decode(p, cache, x, pos, a: AttentionConfig, window: int):
     c_new = jnp.einsum("bsd,dr->bsr", x, p["wdkv"])
     kr_new = jnp.einsum("bsd,dr->bsr", x, p["wkr"])
     kr_new = apply_rope(kr_new[:, :, None, :], posv, a.rope_theta)[:, :, 0, :]
-    ckv = _update_cache_rows(cache["ckv"], c_new, pos, pos_vec)
-    kr = _update_cache_rows(cache["kr"], kr_new, pos, pos_vec)
-
-    S = ckv.shape[1]
-    if pos_vec is None:
-        keep = decode_keep(jnp.arange(S), pos, window)[None, None, None, :]
-    else:
-        keep = decode_keep_batched(jnp.arange(S), pos_vec,
+    if tables is not None:
+        pv = posv[:, 0]
+        ckv = _scatter_page_rows(cache["ckv"], c_new, tables, pv, page_size)
+        kr = _scatter_page_rows(cache["kr"], kr_new, tables, pv, page_size)
+        lat, ropek = _gather_lane(ckv, tables), _gather_lane(kr, tables)
+        keep = decode_keep_batched(jnp.arange(lat.shape[1]), pv,
                                    window)[:, None, None, :]
+    else:
+        ckv = _update_cache_rows(cache["ckv"], c_new, pos, pos_vec)
+        kr = _update_cache_rows(cache["kr"], kr_new, pos, pos_vec)
+        lat, ropek = ckv, kr
+        S = lat.shape[1]
+        if pos_vec is None:
+            keep = decode_keep(jnp.arange(S), pos,
+                               window)[None, None, None, :]
+        else:
+            keep = decode_keep_batched(jnp.arange(S), pos_vec,
+                                       window)[:, None, None, :]
     scale = 1.0 / jnp.sqrt(a.qk_nope_dim + a.qk_rope_dim).astype(x.dtype)
-    s_lat = jnp.einsum("bshr,btr->bhst", q_lat, ckv)
-    s_rope = jnp.einsum("bshk,btk->bhst", q_rope, kr)
+    s_lat = jnp.einsum("bshr,btr->bhst", q_lat, lat)
+    s_rope = jnp.einsum("bshk,btk->bhst", q_rope, ropek)
     w = _masked_softmax((s_lat + s_rope) * scale, keep).astype(x.dtype)
-    o_lat = jnp.einsum("bhst,btr->bshr", w, ckv)             # (B,1,H,R)
+    o_lat = jnp.einsum("bhst,btr->bshr", w, lat)             # (B,1,H,R)
     out = jnp.einsum("bshr,rhk->bshk", o_lat, p["wuv"]).reshape(B, 1, -1)
     y = jnp.einsum("bsf,fd->bsd", out, p["wo"])
     return y, {"ckv": ckv, "kr": kr}
 
 
 def mla_prefill(p, cache, x, positions, pos0, a: AttentionConfig,
-                window: int):
+                window: int, tables=None, page_size: int = 0):
     """Chunked MLA prefill: absorbed-matmul attention (same math as
     ``mla_decode``, C query rows instead of 1) that writes the latent +
-    rope-key cache rows at [pos0, pos0+C)."""
+    rope-key cache rows at [pos0, pos0+C) — through the block table when
+    ``tables`` is given (paged layout, any alignment)."""
     B, C, _ = x.shape
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     q_nope, q_rope = jnp.split(q, [a.qk_nope_dim], axis=-1)
@@ -490,19 +576,27 @@ def mla_prefill(p, cache, x, positions, pos0, a: AttentionConfig,
     kr_new = jnp.einsum("bsd,dr->bsr", x, p["wkr"])
     kr_new = apply_rope(kr_new[:, :, None, :], positions,
                         a.rope_theta)[:, :, 0, :]
-    ckv = jax.lax.dynamic_update_slice_in_dim(
-        cache["ckv"], c_new.astype(cache["ckv"].dtype), pos0, axis=1)
-    kr = jax.lax.dynamic_update_slice_in_dim(
-        cache["kr"], kr_new.astype(cache["kr"].dtype), pos0, axis=1)
+    if tables is not None:
+        ckv = _scatter_chunk_rows(cache["ckv"], c_new, tables, positions,
+                                  page_size)
+        kr = _scatter_chunk_rows(cache["kr"], kr_new, tables, positions,
+                                 page_size)
+        lat, ropek = _gather_lane(ckv, tables), _gather_lane(kr, tables)
+    else:
+        ckv = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], c_new.astype(cache["ckv"].dtype), pos0, axis=1)
+        kr = jax.lax.dynamic_update_slice_in_dim(
+            cache["kr"], kr_new.astype(cache["kr"].dtype), pos0, axis=1)
+        lat, ropek = ckv, kr
 
-    S = ckv.shape[1]
+    S = lat.shape[1]
     keep = causal_window_mask(positions[0], jnp.arange(S), window)  # (C,S)
     scale = 1.0 / jnp.sqrt(a.qk_nope_dim + a.qk_rope_dim).astype(x.dtype)
-    s_lat = jnp.einsum("bshr,btr->bhst", q_lat, ckv)
-    s_rope = jnp.einsum("bshk,btk->bhst", q_rope, kr)
+    s_lat = jnp.einsum("bshr,btr->bhst", q_lat, lat)
+    s_rope = jnp.einsum("bshk,btk->bhst", q_rope, ropek)
     w = _masked_softmax((s_lat + s_rope) * scale,
                         keep[None, None]).astype(x.dtype)
-    o_lat = jnp.einsum("bhst,btr->bshr", w, ckv)             # (B,C,H,R)
+    o_lat = jnp.einsum("bhst,btr->bshr", w, lat)             # (B,C,H,R)
     out = jnp.einsum("bshr,rhk->bshk", o_lat, p["wuv"]).reshape(B, C, -1)
     y = jnp.einsum("bsf,fd->bsd", out, p["wo"])
     return y, {"ckv": ckv, "kr": kr}
@@ -528,19 +622,23 @@ def attn_init_cache(batch: int, max_len: int, cfg: ArchConfig, dtype):
 
 
 def attn_decode(p, cache, x, pos, cfg: ArchConfig, window: int,
-                impl: str | None = None):
+                impl: str | None = None, tables=None, page_size: int = 0):
     a = cfg.attention
     if a.kv_lora_rank:
         # MLA decode attends in the latent space already ((B,H,1,S) scores
         # against the 576-float cache rows) — the absorbed ref path *is*
         # the memory-lean kernel here
-        return mla_decode(p, cache, x, pos, a, window)
-    return gqa_decode(p, cache, x, pos, a, window, impl=impl)
+        return mla_decode(p, cache, x, pos, a, window, tables=tables,
+                          page_size=page_size)
+    return gqa_decode(p, cache, x, pos, a, window, impl=impl,
+                      tables=tables, page_size=page_size)
 
 
 def attn_prefill(p, cache, x, positions, pos0, cfg: ArchConfig, window: int,
-                 impl: str | None = None):
+                 impl: str | None = None, tables=None, page_size: int = 0):
     a = cfg.attention
     if a.kv_lora_rank:
-        return mla_prefill(p, cache, x, positions, pos0, a, window)
-    return gqa_prefill(p, cache, x, positions, pos0, a, window, impl=impl)
+        return mla_prefill(p, cache, x, positions, pos0, a, window,
+                           tables=tables, page_size=page_size)
+    return gqa_prefill(p, cache, x, positions, pos0, a, window, impl=impl,
+                       tables=tables, page_size=page_size)

@@ -49,6 +49,7 @@ class Model:
     decode_step: Callable | None = None
     prefill: Callable | None = None        # encdec: encoder -> cross-attn cache
     chunk_prefill: Callable | None = None  # decoder: chunked prompt prefill
+    init_paged_cache: Callable | None = None  # decoder: paged serve pool
 
 
 def build_model(cfg: ArchConfig) -> Model:
@@ -66,20 +67,28 @@ def build_model(cfg: ArchConfig) -> Model:
         def init_cache(batch, max_len):
             return transformer.init_decoder_cache(cfg, batch, max_len)
 
-        def decode_step(params, cache, batch, pos, seq_len, unroll=False):
+        def init_paged_cache(max_slots, page_size, num_pages):
+            return transformer.init_paged_decoder_cache(
+                cfg, max_slots, page_size, num_pages)
+
+        def decode_step(params, cache, batch, pos, seq_len, unroll=False,
+                        block_tables=None, page_size=0):
             return transformer.decoder_decode_step(
                 cast_params(params, cdt), cache, batch["tokens"], pos, cfg,
-                seq_len=seq_len, unroll=unroll)
+                seq_len=seq_len, unroll=unroll, block_tables=block_tables,
+                page_size=page_size)
 
         def chunk_prefill(params, cache, tokens, pos0, valid, *, seq_len,
-                          unroll=False):
+                          unroll=False, block_tables=None, page_size=0):
             return transformer.decoder_prefill(
                 cast_params(params, cdt), cache, tokens, pos0, valid, cfg,
-                seq_len=seq_len, unroll=unroll)
+                seq_len=seq_len, unroll=unroll, block_tables=block_tables,
+                page_size=page_size)
 
         return Model(cfg, lambda k: transformer.init_decoder(k, cfg),
                      loss_fn, forward, init_cache, decode_step,
-                     chunk_prefill=chunk_prefill)
+                     chunk_prefill=chunk_prefill,
+                     init_paged_cache=init_paged_cache)
 
     if cfg.family == "encdec":
         def loss_fn(params, batch, rng=None, unroll=False):

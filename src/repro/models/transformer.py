@@ -147,13 +147,14 @@ def _apply_layer(p, x, positions, cfg: ArchConfig, kind: str, window,
 
 
 def _decode_layer(p, cache, x, pos, cfg: ArchConfig, kind: str, window,
-                  attn_impl=None):
+                  attn_impl=None, tables=None, page_size=0):
     eps = cfg.norm_eps
     h = rms_norm(x, p["ln1"], eps)
     new_cache = {}
     if kind in ("dense", "moe"):
         y, new_cache["attn"] = attn_mod.attn_decode(
-            p["attn"], cache["attn"], h, pos, cfg, window, impl=attn_impl)
+            p["attn"], cache["attn"], h, pos, cfg, window, impl=attn_impl,
+            tables=tables, page_size=page_size)
         x = x + y
     elif kind == "ssm":
         y, new_cache["ssm"] = ssm_mod.ssm_decode(
@@ -161,7 +162,8 @@ def _decode_layer(p, cache, x, pos, cfg: ArchConfig, kind: str, window,
         x = x + y
     elif kind == "hybrid":
         ya, new_cache["attn"] = attn_mod.attn_decode(
-            p["attn"], cache["attn"], h, pos, cfg, window, impl=attn_impl)
+            p["attn"], cache["attn"], h, pos, cfg, window, impl=attn_impl,
+            tables=tables, page_size=page_size)
         ys, new_cache["ssm"] = ssm_mod.ssm_decode(
             p["ssm"], cache["ssm"], h, cfg.d_model, cfg.ssm, eps)
         x = x + 0.5 * (rms_norm(ya, p["fuse_na"], eps)
@@ -179,7 +181,8 @@ def _decode_layer(p, cache, x, pos, cfg: ArchConfig, kind: str, window,
 
 
 def _prefill_layer(p, cache, x, positions, pos0, valid_count, valid_flat,
-                   cfg: ArchConfig, kind: str, window, attn_impl=None):
+                   cfg: ArchConfig, kind: str, window, attn_impl=None,
+                   tables=None, page_size=0):
     """Whole-chunk layer application that also writes the layer cache.
 
     x: (B,C,d); positions (B,C) absolute; pos0 scalar chunk start;
@@ -191,7 +194,7 @@ def _prefill_layer(p, cache, x, positions, pos0, valid_count, valid_flat,
     if kind in ("dense", "moe"):
         y, new_cache["attn"] = attn_mod.attn_prefill(
             p["attn"], cache["attn"], h, positions, pos0, cfg, window,
-            impl=attn_impl)
+            impl=attn_impl, tables=tables, page_size=page_size)
         x = x + y
     elif kind == "ssm":
         y, new_cache["ssm"] = ssm_mod.ssm_prefill(
@@ -201,7 +204,7 @@ def _prefill_layer(p, cache, x, positions, pos0, valid_count, valid_flat,
     elif kind == "hybrid":
         ya, new_cache["attn"] = attn_mod.attn_prefill(
             p["attn"], cache["attn"], h, positions, pos0, cfg, window,
-            impl=attn_impl)
+            impl=attn_impl, tables=tables, page_size=page_size)
         ys, new_cache["ssm"] = ssm_mod.ssm_prefill(
             p["ssm"], cache["ssm"], h, valid_count, cfg.d_model,
             cfg.ssm, eps)
@@ -360,11 +363,41 @@ def init_decoder_cache(cfg: ArchConfig, batch: int, max_len: int):
     return caches
 
 
+def init_paged_decoder_cache(cfg: ArchConfig, max_slots: int,
+                             page_size: int, num_pages: int):
+    """Paged cache pool mirroring the segment structure: attention leaves
+    hold (count, num_pages, page_size, ...) physical pages shared by every
+    slot through a block table, SSM conv/state leaves keep one lane per
+    slot (count, max_slots, ...) — they have no sequence dim to page. The
+    meta/VLM row padding of ``init_decoder_cache`` does not apply: the
+    serve paths never write meta prefixes, and pages are allocated by
+    demand, not worst case."""
+    dtype = dtype_of(cfg.dtype)
+    caches = []
+    for kind, count in segments(cfg):
+        one = {}
+        if kind in ("dense", "moe", "hybrid"):
+            one["attn"] = attn_mod.attn_init_cache(num_pages, page_size,
+                                                   cfg, dtype)
+        if kind in ("ssm", "hybrid"):
+            one["ssm"] = ssm_mod.ssm_init_cache(max_slots, cfg.d_model,
+                                                cfg.ssm, dtype)
+        stacked = jax.tree.map(
+            lambda v: jnp.broadcast_to(v[None], (count, *v.shape)), one)
+        caches.append(stacked)
+    return caches
+
+
 def decoder_decode_step(params, caches, tokens, pos, cfg: ArchConfig,
-                        *, seq_len: int, unroll: bool = False):
+                        *, seq_len: int, unroll: bool = False,
+                        block_tables=None, page_size: int = 0):
     """One decode step. tokens:(B,1) int32; pos: scalar int32 (cache index
     shared by the whole batch) or (B,) int32 per-sequence indices (the
     serving engine's slot pool, where every sequence is at its own depth).
+
+    ``block_tables`` (B, NP) int32 routes attention caches through the
+    paged layout (``init_paged_decoder_cache``); the tables are a scan
+    constant — same physical pages for every layer of a slot's lane.
 
     Returns (logits (B,1,V), new_caches)."""
     dtype = dtype_of(cfg.dtype)
@@ -388,7 +421,8 @@ def decoder_decode_step(params, caches, tokens, pos, cfg: ArchConfig,
             lp, lc, w = xs
             win = _static if _static is not None else w
             x, nc = _decode_layer(lp, lc, x, pos, cfg, _kind, win,
-                                  attn_impl=attn_impl)
+                                  attn_impl=attn_impl, tables=block_tables,
+                                  page_size=page_size)
             return x, nc
 
         if cfg.scan_layers and count > 1:
@@ -411,7 +445,8 @@ def decoder_decode_step(params, caches, tokens, pos, cfg: ArchConfig,
 
 
 def decoder_prefill(params, caches, tokens, pos0, valid, cfg: ArchConfig,
-                    *, seq_len: int, unroll: bool = False):
+                    *, seq_len: int, unroll: bool = False,
+                    block_tables=None, page_size: int = 0):
     """Chunked whole-prompt prefill: one full-sequence pass over a (B,C)
     token chunk starting at cache position ``pos0`` that computes logits
     for every chunk position AND writes all layer caches — replacing the
@@ -459,7 +494,8 @@ def decoder_prefill(params, caches, tokens, pos0, valid, cfg: ArchConfig,
             win = _static if _static is not None else w
             x, nc = _prefill_layer(lp, lc, x, positions, pos0, valid,
                                    valid_flat, cfg, _kind, win,
-                                   attn_impl=attn_impl)
+                                   attn_impl=attn_impl, tables=block_tables,
+                                   page_size=page_size)
             x = act.constrain(x)
             return x, nc
 

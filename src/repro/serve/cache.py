@@ -1,39 +1,77 @@
-"""Slot-indexed KV/SSM cache pool.
+"""Paged KV/SSM cache pool + page allocator.
 
-The pool is just ``model.init_cache(max_slots, max_seq)`` — a pytree whose
-leaves carry (segment-stacked) ``(layers, slots, ...)`` axes — plus the
-three operations the engine needs:
+Two pool layouts back the engine (DESIGN.md "Paged KV cache & prefix
+caching"):
 
-- ``slot_view`` / ``slot_write``: gather one slot's (1, ...) cache slice
-  out of the pool and scatter it back, so chunked prefill can run the
-  batched model path against a single lane via ``dynamic_update_slice``
-  (works unchanged for GQA k/v, MLA latent, and SSM conv/state leaves —
-  the slot axis is the batch axis everywhere).
-- ``reset_slot``: zero one lane — the hand-off between requests. The
-  engine runs it at admission: causal masking hides a previous occupant's
-  stale attention rows on its own, but the SSM conv/state lane carries
-  across prefill chunks by design and must start from zeros.
-- ``pool_shardings``: mesh placement through ``repro.dist`` — slots over
-  the data axes, head-like dims over ``model``.
+- **Paged (default).** Attention leaves hold ``num_pages`` fixed-size
+  physical pages — ``(layers, num_pages, page_size, ...)`` — shared by
+  every slot through a per-slot *block table* (``(max_slots,
+  pages_per_slot)`` int32 of physical page ids). Reads gather lanes (or
+  fetch pages tile-wise inside ``flash_decode_paged``), writes scatter
+  rows through the table, and the host-side :class:`PageAllocator` owns
+  the free list, refcounts, the hashed prefix cache and copy-on-write
+  bookkeeping. SSM conv/state leaves have no sequence dimension to page
+  and keep one lane per slot: ``(layers, max_slots, ...)``.
+- **Contiguous (legacy / oracle).** ``model.init_cache(max_slots,
+  max_seq)``: one private ``max_seq`` lane per slot. Kept as the parity
+  oracle for the paged engine and for A/B density benchmarks.
+
+Physical page 0 is the **null page**: block tables initialize (and reset)
+to 0, idle slots and pad-row scatters land there harmlessly, and it is
+never on the free list.
+
+Device ops are all trace-stable: ``copy_page`` / ``reset_slot_ssm`` jit
+once per pool structure, and the block tables enter jitted programs as
+same-shaped int32 inputs per dispatch — values change under churn,
+shapes never do.
 """
 from __future__ import annotations
 
 import functools
+import hashlib
+from collections import OrderedDict, deque
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.dist.sharding import cache_shardings
 
+NULL_PAGE = 0
+
+
+# ---------------------------------------------------------------------------
+# pool construction / leaf classification
+# ---------------------------------------------------------------------------
 
 def make_pool(model, max_slots: int, max_seq: int):
-    """Allocate the cache pool: one lane per slot, ``max_seq`` rows each."""
+    """Contiguous pool: one lane per slot, ``max_seq`` rows each."""
     return model.init_cache(max_slots, max_seq)
 
 
+def make_paged_pool(model, max_slots: int, page_size: int, num_pages: int):
+    """Paged pool: attention leaves are (layers, num_pages, page_size, ...)
+    physical pages; SSM leaves stay (layers, max_slots, ...) lanes."""
+    return model.init_paged_cache(max_slots, page_size, num_pages)
+
+
+def is_paged_leaf(path) -> bool:
+    """True for attention K/V / MLA-latent leaves (page-granular); False
+    for SSM conv/state lanes (slot-granular, no sequence dim)."""
+    return any(getattr(k, "key", None) == "attn" for k in path)
+
+
+def has_paged_leaves(pool) -> bool:
+    """Whether any pool leaf is page-granular (pure-SSM pools have none —
+    paging is a structural no-op there and the engine runs slot-granular)."""
+    return any(is_paged_leaf(p)
+               for p, _ in jax.tree_util.tree_leaves_with_path(pool))
+
+
 def slot_axis_of(leaf) -> int:
-    """Slot (batch) axis index of a pool leaf: the decoder stacks segment
-    caches as (layer, slot, ...), so it is axis 1 for every leaf."""
+    """Slot (batch) axis of a slot-granular pool leaf: the decoder stacks
+    segment caches as (layer, slot, ...), so it is axis 1 for every leaf.
+    (In a paged pool, axis 1 of an attention leaf is the *page* id.)"""
     del leaf
     return 1
 
@@ -52,9 +90,34 @@ def slot_write(pool, slot, view):
             v, u.astype(v.dtype), slot, axis=slot_axis_of(v)), pool, view)
 
 
+def paged_view(pool, slot):
+    """Prefill view of a paged pool: page-granular leaves pass through
+    whole (chunk writes scatter through the block table), slot-granular
+    SSM leaves are sliced to the (1, ...) lane the batched path expects."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, v: v if is_paged_leaf(p)
+        else jax.lax.dynamic_slice_in_dim(v, slot, 1, axis=1), pool)
+
+
+def paged_write(pool, slot, view):
+    """Fold a ``paged_view`` back: pages replace wholesale, SSM lanes
+    scatter to their slot."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, v, u: u if is_paged_leaf(p)
+        else jax.lax.dynamic_update_slice_in_dim(
+            v, u.astype(v.dtype), slot, axis=1), pool, view)
+
+
+# ---------------------------------------------------------------------------
+# device ops
+# ---------------------------------------------------------------------------
+
 @functools.partial(jax.jit, donate_argnums=(0,))
 def reset_slot(pool, slot):
-    """Zero one lane of the pool (all layers, all leaves)."""
+    """Zero one slot-granular lane of the pool (all layers, all leaves).
+    Contiguous pools only — the engine's admission path uses the
+    O(d_state) ``reset_slot_ssm`` instead; this remains as a test utility
+    (clean-lane oracles)."""
     def leaf(v):
         ax = slot_axis_of(v)
         zeros = jnp.zeros(v.shape[:ax] + (1,) + v.shape[ax + 1:], v.dtype)
@@ -62,14 +125,285 @@ def reset_slot(pool, slot):
     return jax.tree.map(leaf, pool)
 
 
-def pool_shardings(mesh, pool, max_slots: int):
-    """NamedShardings for the pool: slot dim over data axes, KV heads /
-    MLA latent / SSM heads over ``model`` (see ``repro.dist.sharding``)."""
-    return cache_shardings(mesh, pool, max_slots)
+@functools.partial(jax.jit, donate_argnums=(0,))
+def reset_slot_ssm(pool, slot):
+    """Zero one slot's SSM conv/state lanes only — O(d_state) per
+    admission, not the old O(max_seq) full-lane zero. Attention rows need
+    no zeroing: a previous occupant's stale rows are causally masked until
+    the new request overwrites them in order (and in the paged pool the
+    slot starts from freshly allocated pages anyway). The SSM lanes *do*
+    need it: conv/state carries across prefill chunks by design, so a
+    fresh request must start from zeros. Works on both pool layouts
+    (page-granular leaves are untouched either way)."""
+    def leaf(p, v):
+        if is_paged_leaf(p):
+            return v
+        zeros = jnp.zeros(v.shape[:1] + (1,) + v.shape[2:], v.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(v, zeros, slot, axis=1)
+    return jax.tree_util.tree_map_with_path(leaf, pool)
 
 
-def place_pool(mesh, pool, max_slots: int):
+@functools.partial(jax.jit, donate_argnums=(0,))
+def copy_page(pool, dst, src):
+    """Copy one physical page across all layers of every page-granular
+    leaf — the copy-on-write device op. Scalar dst/src keep it a single
+    trace; COW is rare (one page per diverging request), so the engine
+    loops host-side for multiples."""
+    def leaf(p, v):
+        if not is_paged_leaf(p):
+            return v
+        page = jax.lax.dynamic_slice_in_dim(v, src, 1, axis=1)
+        return jax.lax.dynamic_update_slice_in_dim(v, page, dst, axis=1)
+    return jax.tree_util.tree_map_with_path(leaf, pool)
+
+
+# ---------------------------------------------------------------------------
+# placement
+# ---------------------------------------------------------------------------
+
+def pool_shardings(mesh, pool, max_slots: int, num_pages: int | None = None):
+    """NamedShardings for the pool: the slot dim — and, in a paged pool,
+    the page dim — over data axes; KV heads / MLA latent / SSM heads over
+    ``model`` (see ``repro.dist.sharding``)."""
+    return cache_shardings(mesh, pool, max_slots, page_batch=num_pages)
+
+
+def place_pool(mesh, pool, max_slots: int, num_pages: int | None = None):
     """Device-put the pool onto its serve-mesh shardings."""
     if mesh is None:
         return pool
-    return jax.device_put(pool, pool_shardings(mesh, pool, max_slots))
+    return jax.device_put(
+        pool, pool_shardings(mesh, pool, max_slots, num_pages))
+
+
+# ---------------------------------------------------------------------------
+# page allocator (host-side)
+# ---------------------------------------------------------------------------
+
+class OutOfPages(RuntimeError):
+    """Page pool exhausted: no free page and nothing evictable. Admission
+    reservations make this unreachable from the engine loop; hitting it
+    means allocator bookkeeping is broken."""
+
+
+def hash_prefix_chunk(prev: bytes, tokens) -> bytes:
+    """One hash-chain step over a page of prompt tokens: ``H(prev ||
+    tokens)``. Module-level so tests can monkeypatch it to force
+    collisions; collisions are survivable (entries store the full token
+    prefix and verify it on hit) — just cache misses."""
+    h = hashlib.sha1(prev)
+    h.update(np.asarray(tokens, np.int64).tobytes())
+    return h.digest()
+
+
+class PageAllocator:
+    """Free-list page allocator + refcounts + hashed prefix cache.
+
+    All host-side numpy/dict state; the engine uploads ``tables`` as a
+    same-shaped int32 array per dispatch. Invariants:
+
+    - ``refs[pid]`` counts owners: one per slot whose table maps the page,
+      plus one if the prefix cache holds it. Page 0 (the null page) is
+      pinned and never allocated or freed.
+    - A page registered in the prefix cache is **never written again**
+      (registration happens after prefill finishes the prompt; decode
+      writes land strictly beyond the prompt's full pages).
+    - A write to a shared page (refs > 1) must copy first:
+      :meth:`ensure_writable` returns the (dst, src) device copies.
+    - Admission reserves its worst-case page count up front
+      (:meth:`try_admit`), so mid-flight allocation never fails.
+    - Cache-only pages (refs == 1, held only by the prefix cache) are
+      evictable, oldest-hit first (LRU).
+    """
+
+    def __init__(self, num_pages: int, page_size: int, max_slots: int,
+                 pages_per_slot: int, *, prefix_cache: bool = True):
+        if num_pages < 2:
+            raise ValueError(f"need >= 2 pages (null + 1), got {num_pages}")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.max_slots = max_slots
+        self.pages_per_slot = pages_per_slot
+        self.prefix_cache = prefix_cache
+        self.refs = np.zeros(num_pages, np.int64)
+        self.refs[NULL_PAGE] = 1                 # pinned
+        self.free: deque[int] = deque(range(1, num_pages))
+        self.tables = np.zeros((max_slots, pages_per_slot), np.int32)
+        self._reserved = np.zeros(max_slots, np.int64)
+        # prefix cache: chain digest -> (pid, full token prefix); LRU over
+        # digests orders eviction
+        self._entries: dict[bytes, tuple[int, tuple]] = {}
+        self._by_pid: dict[int, bytes] = {}
+        self._lru: OrderedDict[bytes, None] = OrderedDict()
+        # counters (pages unless noted; read by EngineStats / bench)
+        self.hits = 0
+        self.lookups = 0
+        self.hit_tokens = 0
+        self.cow_copies = 0
+        self.evictions = 0
+        self.collisions = 0
+
+    # -- capacity -----------------------------------------------------------
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def _evictable(self) -> int:
+        return sum(1 for pid in self._by_pid if self.refs[pid] == 1)
+
+    def available(self) -> int:
+        """Pages an admission could claim right now: free + evictable,
+        minus what already-admitted requests still have reserved."""
+        return (len(self.free) + self._evictable()
+                - int(self._reserved.sum()))
+
+    @property
+    def allocated(self) -> int:
+        """Pages holding live or cached rows (excludes the null page)."""
+        return self.num_pages - 1 - len(self.free)
+
+    def occupancy(self) -> float:
+        return self.allocated / max(self.num_pages - 1, 1)
+
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    # -- page ops -----------------------------------------------------------
+
+    def _alloc(self, slot: int | None) -> int:
+        if not self.free and not self._evict_one():
+            raise OutOfPages(
+                f"no free page ({self.allocated}/{self.num_pages - 1} "
+                f"allocated, nothing evictable)")
+        pid = self.free.popleft()
+        assert self.refs[pid] == 0
+        self.refs[pid] = 1
+        if slot is not None and self._reserved[slot] > 0:
+            self._reserved[slot] -= 1
+        return pid
+
+    def _evict_one(self) -> bool:
+        for key in self._lru:            # oldest-hit first
+            pid = self._entries[key][0]
+            if self.refs[pid] == 1:      # cache-only: safe to drop
+                self._drop_entry(key)
+                self.refs[pid] = 0
+                self.free.append(pid)
+                self.evictions += 1
+                return True
+        return False
+
+    def _drop_entry(self, key: bytes) -> None:
+        pid, _ = self._entries.pop(key)
+        self._by_pid.pop(pid, None)
+        self._lru.pop(key, None)
+
+    def _unref(self, pid: int) -> None:
+        if pid == NULL_PAGE:
+            return
+        self.refs[pid] -= 1
+        assert self.refs[pid] >= 0, f"refcount underflow on page {pid}"
+        if self.refs[pid] == 0:
+            self.free.append(pid)
+
+    # -- admission ----------------------------------------------------------
+
+    def _match_prefix(self, tokens) -> list[int]:
+        """Longest chain of cached full prompt pages (hash-chain walk with
+        token verification — a digest collision is a miss, not corruption)."""
+        ps = self.page_size
+        pids: list[int] = []
+        prev = b""
+        for j in range(len(tokens) // ps):
+            prev = hash_prefix_chunk(prev, tokens[j * ps:(j + 1) * ps])
+            self.lookups += 1
+            ent = self._entries.get(prev)
+            if ent is None:
+                break
+            pid, prefix = ent
+            if tuple(tokens[:(j + 1) * ps]) != prefix:
+                self.collisions += 1
+                break
+            pids.append(pid)
+        return pids
+
+    def try_admit(self, slot: int, tokens, max_new: int) -> int | None:
+        """Install prefix hits into ``slot``'s table and reserve the
+        worst-case remaining page count. Returns the hit token count
+        (prefill resumes there), or None — with zero state mutated — if
+        the pool can't hold the request yet."""
+        ps = self.page_size
+        S0 = len(tokens)
+        total = self.pages_needed(S0 + max_new)
+        hits = self._match_prefix(tokens) if self.prefix_cache else []
+        h = len(hits)
+        full_hit = h * ps == S0
+        # full-prompt hit still re-runs the final prompt token for its
+        # sampling logits; that write COWs the shared last page: +1
+        need = total - h + (1 if full_hit else 0)
+        if need > self.available():
+            return None
+        row = self.tables[slot]
+        assert not row.any() and self._reserved[slot] == 0, \
+            f"slot {slot} admitted while holding pages"
+        for j, pid in enumerate(hits):
+            self.refs[pid] += 1
+            row[j] = pid
+            self._lru.move_to_end(self._by_pid[pid])
+        self._reserved[slot] = need
+        self.hits += h
+        self.hit_tokens += h * ps
+        return h * ps
+
+    def ensure_writable(self, slot: int, position: int) -> list[tuple[int, int]]:
+        """Make the page covering ``position`` privately writable before a
+        dispatch writes it: allocate on first touch, copy-on-write when
+        shared. Returns the (dst, src) device copies to run (at most one)."""
+        j = position // self.page_size
+        row = self.tables[slot]
+        pid = int(row[j])
+        if pid == NULL_PAGE:
+            row[j] = self._alloc(slot)
+            return []
+        if self.refs[pid] > 1:           # shared with the cache/other slots
+            new = self._alloc(slot)
+            row[j] = new
+            self.refs[pid] -= 1          # this slot's ref moves to the copy
+            self.cow_copies += 1
+            return [(new, pid)]
+        return []
+
+    def register_prefix(self, slot: int, tokens) -> None:
+        """Publish the request's full prompt pages into the prefix cache
+        (+1 ref each; cache entries are never written afterwards). Pages
+        that arrived as hits, or whose digest is already published by a
+        twin request, are skipped."""
+        if not self.prefix_cache:
+            return
+        ps = self.page_size
+        prev = b""
+        row = self.tables[slot]
+        for j in range(len(tokens) // ps):
+            prev = hash_prefix_chunk(prev, tokens[j * ps:(j + 1) * ps])
+            if prev in self._entries:    # hit-installed or twin (or a
+                continue                 # colliding digest: first wins)
+            pid = int(row[j])
+            if pid == NULL_PAGE or pid in self._by_pid:
+                continue
+            self.refs[pid] += 1
+            self._entries[prev] = (pid, tuple(tokens[:(j + 1) * ps]))
+            self._by_pid[pid] = prev
+            self._lru[prev] = None
+        # hits/twins referenced above stay MRU even when nothing new was
+        # published (the loop body touched move_to_end at admission)
+
+    def release_slot(self, slot: int) -> None:
+        """Free-list page release at request finish: drop the slot's ref on
+        every mapped page (pages the prefix cache still holds survive with
+        refs >= 1 for future hits) and clear its table row + reservation."""
+        row = self.tables[slot]
+        for j in range(self.pages_per_slot):
+            pid = int(row[j])
+            row[j] = NULL_PAGE
+            self._unref(pid)
+        self._reserved[slot] = 0

@@ -17,6 +17,15 @@ Design contract (the reason this engine never recompiles):
   the LM head applied once. For SSM/hybrid families the chunk is rounded
   up to a multiple of ``cfg.ssm.chunk`` so the SSD block decomposition
   aligns with a single-call prefill bit-for-bit.
+- **Paged KV cache (default).** Attention lanes live in a shared pool of
+  fixed-size pages routed per slot by a block table (``page_size``,
+  ``num_pages``); the host-side :class:`~repro.serve.cache.PageAllocator`
+  owns the free list, refcounts and the hashed prefix cache, so admission
+  capacity follows what the traffic actually holds, not ``max_slots *
+  max_seq`` worst case. Block tables enter the jitted programs as
+  same-shaped int32 inputs per dispatch — compile-once still holds under
+  churn. ``page_size=0`` selects the contiguous per-slot pool (the parity
+  oracle). See DESIGN.md "Paged KV cache & prefix caching".
 - **Slot-independent numerics.** Greedy decode of a request is bit-exact
   with ``repro.train.serve.generate`` on the same prompt no matter what
   the other slots are doing (MoE routes drop-free at decode/prefill;
@@ -79,7 +88,9 @@ class EngineStats:
         self._steps = r.counter("serve/decode_steps")
         self._admissions = r.counter("serve/admissions")
         self._evictions = r.counter("serve/evictions")
-        self._occupancy = r.gauge("serve/slot_occupancy")
+        self._page_occupancy = r.gauge("serve/page_occupancy")
+        self._prefix_hit_rate = r.gauge("serve/prefix_hit_rate")
+        self._cow_copies = r.gauge("serve/cow_copies")
         self._h_step = r.histogram("serve/step_time_s")
         self._h_ttft = r.histogram("serve/ttft_s")
         self._h_queue = r.histogram("serve/queue_wait_s")
@@ -116,8 +127,16 @@ class EngineStats:
     def record_evictions(self, n: int) -> None:
         self._evictions.inc(n)
 
-    def set_occupancy(self, n: int) -> None:
-        self._occupancy.set(n)
+    def set_page_stats(self, occupancy: float, hit_rate: float,
+                       cow: int) -> None:
+        """Cache-health gauges, refreshed per step. In a paged engine they
+        come from the :class:`~repro.serve.cache.PageAllocator` (fraction
+        of the physical page pool holding live/cached rows, prefix-cache
+        hit rate over page lookups, cumulative copy-on-write page copies);
+        the contiguous fallback reports slot-pool occupancy and zeros."""
+        self._page_occupancy.set(occupancy)
+        self._prefix_hit_rate.set(hit_rate)
+        self._cow_copies.set(cow)
 
     # -- the read surface (public, unchanged + TTFT/queue-wait) -------------
 
@@ -148,6 +167,18 @@ class EngineStats:
     @property
     def evictions(self) -> int:
         return self._evictions.value
+
+    @property
+    def page_occupancy(self) -> float:
+        return self._page_occupancy.value
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        return self._prefix_hit_rate.value
+
+    @property
+    def cow_copies(self) -> int:
+        return int(self._cow_copies.value)
 
     def prefill_tok_s(self) -> float:
         return self.prefill_tokens / max(self.prefill_time, 1e-9)
@@ -185,7 +216,17 @@ class Engine:
     def __init__(self, model, params, *, max_slots: int = 8,
                  max_seq: int = 256, prefill_chunk: int = 32,
                  mesh=None, fused_sampling: bool = False,
-                 unroll: bool = False, attn_impl: str | None = None):
+                 unroll: bool = False, attn_impl: str | None = None,
+                 page_size: int = 16, num_pages: int = 0,
+                 prefix_cache: bool = True):
+        """``page_size`` > 0 (the default) runs the paged KV cache: slots
+        share a physical page pool through block tables, sized by
+        ``num_pages`` (0 = worst-case auto: every slot can still reach
+        ``max_seq``). ``page_size=0`` keeps the contiguous per-slot pool —
+        the parity oracle and the A/B baseline for density benchmarks.
+        ``prefix_cache`` hands shared page-aligned prompt prefixes to new
+        requests by refcount (attention families only; SSM state is not
+        reconstructible from cache pages, so it is ignored there)."""
         cfg = model.cfg
         if cfg.family != "decoder":
             raise ValueError(f"serve engine supports decoder models, "
@@ -208,6 +249,10 @@ class Engine:
             # pos0 and silently overwrite earlier prompt rows — round the
             # pool up so ceil(S0/C)*C <= max_seq for any admissible S0
             max_seq += prefill_chunk - max_seq % prefill_chunk
+        if page_size > 0 and max_seq % page_size:
+            # block tables cover whole pages; growing max_seq keeps the
+            # prefill-chunk invariant above intact
+            max_seq += page_size - max_seq % page_size
         self.model = model
         self.cfg = cfg
         self.max_slots = max_slots
@@ -222,9 +267,39 @@ class Engine:
             from repro.dist.sharding import param_shardings
             params = jax.device_put(params, param_shardings(mesh, params))
         self.params = params
-        self.pool = cache_mod.place_pool(
-            mesh, cache_mod.make_pool(model, max_slots, max_seq), max_slots)
-        self.sched = SlotScheduler(max_slots, max_seq)
+
+        # pure-SSM families have no sequence-dim leaves to page: fall back
+        # to the slot-granular pool automatically
+        self.paged = bool(page_size > 0 and model.init_paged_cache is not None
+                          and cfg.attention is not None)
+        self.page_size = page_size if self.paged else 0
+        self.allocator = None
+        if self.paged:
+            pps = max_seq // page_size
+            if num_pages <= 0:
+                # worst case (every slot at max_seq) + null page + one
+                # spare so a full-prompt-hit COW never waits
+                num_pages = max_slots * pps + 2
+            self.num_pages = num_pages
+            pool = cache_mod.make_paged_pool(model, max_slots, page_size,
+                                             num_pages)
+            assert cache_mod.has_paged_leaves(pool)
+            self.pool = cache_mod.place_pool(mesh, pool, max_slots,
+                                             num_pages)
+            self.allocator = cache_mod.PageAllocator(
+                num_pages, page_size, max_slots, pps,
+                prefix_cache=prefix_cache and cfg.ssm is None)
+            self.sched = SlotScheduler(max_slots, max_seq,
+                                       allocator=self.allocator)
+        else:
+            self.num_pages = 0
+            self.pool = cache_mod.place_pool(
+                mesh, cache_mod.make_pool(model, max_slots, max_seq),
+                max_slots)
+            self.sched = SlotScheduler(max_slots, max_seq)
+        # block tables enter every dispatch as one same-shaped int32 array
+        # (a (1, 1) dummy keeps the contiguous signature stable)
+        self._no_tables = jnp.zeros((1, 1), jnp.int32)
         self.stats = EngineStats()
         self._finished_seen = 0      # eviction accounting watermark
         if telemetry.enabled():
@@ -252,9 +327,19 @@ class Engine:
 
     # -- traced steps -------------------------------------------------------
 
-    def _prefill_fn(self, params, pool, tokens, slot, pos0, valid):
-        """One prompt chunk into one slot's cache lane."""
+    def _prefill_fn(self, params, pool, tokens, slot, pos0, valid, tables):
+        """One prompt chunk into one slot's cache lane (contiguous) or its
+        block-table pages (paged; ``tables`` row ``slot`` routes the
+        chunk's scatter/gather)."""
         self.trace_counts["prefill"] += 1
+        if self.paged:
+            view = cache_mod.paged_view(pool, slot)
+            row = jax.lax.dynamic_slice_in_dim(tables, slot, 1, axis=0)
+            logits, view = self.model.chunk_prefill(
+                params, view, tokens, pos0, valid, seq_len=self.max_seq,
+                unroll=self.unroll, block_tables=row,
+                page_size=self.page_size)
+            return cache_mod.paged_write(pool, slot, view), logits
         view = cache_mod.slot_view(pool, slot)
         logits, view = self.model.chunk_prefill(
             params, view, tokens, pos0, valid, seq_len=self.max_seq,
@@ -283,12 +368,18 @@ class Engine:
         return tok, k_next
 
     def _decode_fn(self, params, pool, tokens, pos, temps, top_ks, top_ps,
-                   keys):
+                   keys, tables):
         """One decode step for the whole slot pool + fused sampling."""
         self.trace_counts["decode"] += 1
-        logits, pool = self.model.decode_step(
-            params, pool, {"tokens": tokens}, pos, seq_len=self.max_seq,
-            unroll=self.unroll)
+        if self.paged:
+            logits, pool = self.model.decode_step(
+                params, pool, {"tokens": tokens}, pos, seq_len=self.max_seq,
+                unroll=self.unroll, block_tables=tables,
+                page_size=self.page_size)
+        else:
+            logits, pool = self.model.decode_step(
+                params, pool, {"tokens": tokens}, pos, seq_len=self.max_seq,
+                unroll=self.unroll)
         ks = jax.vmap(jax.random.split)(keys)        # (S, 2, 2)
         k_use, k_next = ks[:, 0], ks[:, 1]
         # all-greedy steps (the default) skip the (S, V) Gumbel draw
@@ -331,32 +422,64 @@ class Engine:
         # (params, prompt, seed), independent of submission order
         self._keys = self._keys.at[slot].set(jax.random.PRNGKey(s.seed))
 
+    def _tables(self):
+        """The block tables for the next dispatch (same-shaped int32 every
+        time — values churn, shapes never do)."""
+        if self.allocator is None:
+            return self._no_tables
+        return jnp.asarray(self.allocator.tables)
+
+    def _make_writable(self, slot: int, lo: int, hi: int) -> None:
+        """Pages covering rows [lo, hi) of ``slot`` become privately
+        writable before a dispatch writes them: first touch allocates off
+        the free list, a prefix-shared page copies-on-write."""
+        ps = self.page_size
+        for j in range(lo // ps, -(-hi // ps)):
+            for dst, src in self.allocator.ensure_writable(slot, j * ps):
+                self.pool = cache_mod.copy_page(self.pool, jnp.int32(dst),
+                                                jnp.int32(src))
+
     def _prefill_request(self, slot: int, req: Request) -> None:
         self._bind_slot(slot, req)
         toks = np.asarray(req.tokens, np.int32)
         S0, C = len(req.tokens), self.prefill_chunk
+        # prefix-cache hits skip their pages entirely; a full-prompt hit
+        # still re-runs the last prompt token for its sampling logits (the
+        # write COWs the shared final page, keeping the cached copy clean)
+        hit = self.sched.slots[slot].hit_tokens
+        start = S0 - 1 if hit >= S0 else hit
         t0 = time.perf_counter()
-        with trace.span("serve/prefill", slot=slot, rid=req.rid, tokens=S0):
-            # zero the lane: SSM state/conv carry across prefill chunks by
-            # design, so a previous occupant's state must not leak in
-            # (causal masking already hides stale attention rows; zeroing
-            # them too is free here)
-            self.pool = cache_mod.reset_slot(self.pool, jnp.int32(slot))
+        with trace.span("serve/prefill", slot=slot, rid=req.rid, tokens=S0,
+                        cached=hit):
+            if self.cfg.ssm is not None:
+                # SSM state/conv carry across prefill chunks by design, so
+                # a previous occupant's state must not leak in. Attention
+                # lanes need no zeroing: stale rows are causally masked
+                # until overwritten in order (paged slots start from the
+                # null table anyway) — admission cost is O(d_state), not
+                # the old O(max_seq) full-lane wipe.
+                self.pool = cache_mod.reset_slot_ssm(self.pool,
+                                                     jnp.int32(slot))
             logits = None
-            for c in range(0, S0, C):
+            for c in range(start, S0, C):
                 sl = toks[c:c + C]
                 valid = len(sl)
                 if valid < C:
                     sl = np.pad(sl, (0, C - valid))
+                if self.paged:
+                    self._make_writable(slot, c, c + valid)
                 t_c = time.perf_counter()
                 self.pool, logits = self._prefill(
                     self.params, self.pool, jnp.asarray(sl[None]),
-                    jnp.int32(slot), jnp.int32(c), jnp.int32(valid))
+                    jnp.int32(slot), jnp.int32(c), jnp.int32(valid),
+                    self._tables())
                 if self._prefill_warm:
                     profile.observe("serve/prefill_chunk",
                                     time.perf_counter() - t_c)
                 else:
                     self._prefill_warm = True
+            if self.allocator is not None:
+                self.allocator.register_prefix(slot, toks)
             tok, k_next = self._sample_prefill(
                 logits, jnp.int32(valid),
                 jnp.float32(req.sampling.temperature),
@@ -365,7 +488,7 @@ class Engine:
                 self._keys[slot])
             tok = int(tok)
         self._keys = self._keys.at[slot].set(k_next)
-        self.stats.record_prefill(S0, time.perf_counter() - t0)
+        self.stats.record_prefill(S0 - start, time.perf_counter() - t0)
         self.sched.record_first_token(slot, tok)
         self.stats.record_first_token(req.ttft)
 
@@ -385,9 +508,21 @@ class Engine:
             self._prefill_request(slot, req)
         self._account_finished()       # max_new=1/eos at first token
         n_active = self.sched.num_active
-        self.stats.set_occupancy(n_active)
+        if self.allocator is not None:
+            self.stats.set_page_stats(self.allocator.occupancy(),
+                                      self.allocator.hit_rate(),
+                                      self.allocator.cow_copies)
+        else:
+            self.stats.set_page_stats(n_active / self.max_slots, 0.0, 0)
         if n_active == 0:
             return 0
+        if self.paged:
+            # the step writes cache row st.pos per live slot: make the
+            # covering page private first (idle slots park on the null
+            # page and need nothing)
+            for slot, st in enumerate(self.sched.slots):
+                if st is not None:
+                    self._make_writable(slot, st.pos, st.pos + 1)
         tokens = jnp.asarray(self.sched.feed_tokens(),
                              jnp.int32)[:, None]
         pos = jnp.asarray(self.sched.positions(), jnp.int32)
@@ -396,7 +531,7 @@ class Engine:
             self.pool, tok, self._keys = self._decode(
                 self.params, self.pool, tokens, pos,
                 jnp.asarray(self._temps), jnp.asarray(self._top_ks),
-                jnp.asarray(self._top_ps), self._keys)
+                jnp.asarray(self._top_ps), self._keys, self._tables())
             tok = np.asarray(tok)                     # sync point
         dt = time.perf_counter() - t0
         if self.stats.steps > 0:     # step 0 is the compile dispatch

@@ -73,14 +73,24 @@ class SlotState:
     generated: list = field(default_factory=list)
     last_token: int = 0        # token to feed at the next decode step
     done: bool = False
+    hit_tokens: int = 0        # prompt tokens served by the prefix cache
 
 
 class SlotScheduler:
-    """FIFO over a fixed pool of ``max_slots`` decode lanes."""
+    """FIFO over a fixed pool of ``max_slots`` decode lanes.
 
-    def __init__(self, max_slots: int, max_seq: int):
+    With a :class:`~repro.serve.cache.PageAllocator` attached, admission is
+    additionally gated on page capacity: the head-of-line request admits
+    only when its worst-case page need fits (``try_admit`` reserves it),
+    and later requests never jump the queue — strict FIFO keeps admission
+    deterministic under memory pressure. Finishing a request releases its
+    pages back to the free list (prefix-cached pages survive for future
+    hits)."""
+
+    def __init__(self, max_slots: int, max_seq: int, allocator=None):
         self.max_slots = max_slots
         self.max_seq = max_seq
+        self.allocator = allocator
         self.pending: deque[Request] = deque()
         self.slots: list[SlotState | None] = [None] * max_slots
         self.finished: dict[int, SlotState] = {}
@@ -97,6 +107,12 @@ class SlotScheduler:
             raise ValueError(
                 f"request needs {len(req.tokens) + req.max_new} cache rows, "
                 f"pool holds {self.max_seq}")
+        if self.allocator is not None:
+            need = self.allocator.pages_needed(len(req.tokens) + req.max_new)
+            if need > self.allocator.num_pages - 1:
+                raise ValueError(
+                    f"request needs {need} pages, pool holds "
+                    f"{self.allocator.num_pages - 1}")
         req.rid = next(self._rid)
         req.t_submit = time.perf_counter()
         trace.async_begin("serve/req/queued", req.rid,
@@ -116,12 +132,21 @@ class SlotScheduler:
         for slot in self.free_slots():
             if not self.pending:
                 break
-            req = self.pending.popleft()
+            req = self.pending[0]
+            hit = 0
+            if self.allocator is not None:
+                got = self.allocator.try_admit(slot, req.tokens, req.max_new)
+                if got is None:
+                    break    # head-of-line blocks until pages free up
+                hit = got
+            self.pending.popleft()
             req.t_admit = time.perf_counter()
             trace.async_end("serve/req/queued", req.rid)
-            trace.async_begin("serve/req/prefill", req.rid, slot=slot)
+            trace.async_begin("serve/req/prefill", req.rid, slot=slot,
+                              cached=hit)
             self.slots[slot] = SlotState(req=req, pos=len(req.tokens),
-                                         last_token=req.tokens[-1])
+                                         last_token=req.tokens[-1],
+                                         hit_tokens=hit)
             placed.append((slot, req))
         return placed
 
@@ -179,6 +204,8 @@ class SlotScheduler:
                             tokens=len(st.generated))
             self.finished[req.rid] = st
             self.slots[slot] = None    # evict mid-flight; slot reusable
+            if self.allocator is not None:
+                self.allocator.release_slot(slot)
 
     # -- results ------------------------------------------------------------
 

@@ -3,7 +3,7 @@
     from repro.telemetry import metrics
     metrics.counter("exchange/bytes_wire").inc(n)
     metrics.histogram("train/step_time_s").observe(dt)
-    metrics.gauge("serve/slot_occupancy").set(k)
+    metrics.gauge("serve/page_occupancy").set(k)
 
 When telemetry is disabled every accessor returns the shared
 :data:`~repro.telemetry.registry.NOOP` object — the hot path then costs

@@ -147,6 +147,22 @@ def _programs_table(records: dict) -> list:
     return lines
 
 
+def _serve_cache_line(records: dict) -> list:
+    """Paged-KV-cache health next to the program attribution: page-pool
+    occupancy, prefix hit-rate, and copy-on-write copies explain *why* the
+    serve programs ran the token counts they did (a hot prefix cache cuts
+    prefill calls; high occupancy explains admission gating)."""
+    keys = ("serve/page_occupancy", "serve/prefix_hit_rate",
+            "serve/cow_copies")
+    if not any(k in records for k in keys):
+        return []
+    occ = records.get(keys[0], {}).get("value", 0.0)
+    hit = records.get(keys[1], {}).get("value", 0.0)
+    cow = records.get(keys[2], {}).get("value", 0.0)
+    return [f"KV cache: page occupancy {occ:.2f}, "
+            f"prefix hit-rate {hit:.2f}, COW copies {int(cow)}"]
+
+
 def _top_spans(trace_path: str, n: int = 12) -> list:
     with open(trace_path) as f:
         try:
@@ -215,6 +231,10 @@ def render(metrics_path: str, trace_path: str | None = None,
         out += ["## Programs (per-program attribution)", ""]
         out += prog_lines
         out.append("")
+        cache_lines = _serve_cache_line(records)
+        if cache_lines:
+            out += cache_lines
+            out.append("")
 
     areas = _by_area(records)
     for area in _AREAS:

@@ -366,15 +366,16 @@ def test_engine_exposes_wire_and_gspmd_does_not():
     # one worker: nothing moves on the wire (egress accounting is per-rank)
     assert eng.wire["bytes_per_step"] == 0
     assert len(eng.wire["per_bucket"]) == eng.wire["num_buckets"]
-    mesh8 = jax.make_mesh((8,), ("data",))
-    jax.set_mesh(mesh8)
-    try:
-        eng8 = build_engine(TrainPlan(algo="bsp", exchanger="asa16"), model,
-                            sgd_momentum(), constant(0.01), mesh8)
-        assert eng8.wire["k"] == 8
-        assert eng8.wire["bytes_per_step"] > 0
-    finally:
-        jax.set_mesh(mesh)
+    if len(jax.devices()) >= 8:   # k>1 wire accounting needs a real 8-mesh
+        mesh8 = jax.make_mesh((8,), ("data",))
+        jax.set_mesh(mesh8)
+        try:
+            eng8 = build_engine(TrainPlan(algo="bsp", exchanger="asa16"),
+                                model, sgd_momentum(), constant(0.01), mesh8)
+            assert eng8.wire["k"] == 8
+            assert eng8.wire["bytes_per_step"] > 0
+        finally:
+            jax.set_mesh(mesh)
     g = build_engine(TrainPlan(algo="gspmd"), model, sgd_momentum(),
                      constant(0.01), mesh)
     assert g.wire is None
