@@ -34,9 +34,24 @@ elastic loop — see DESIGN.md "Fault tolerance & elasticity"):
                     time is the shared measurement times ``factor``), so
                     replay stays bit-identical.
 
+Serve-side kinds (consumed by ``repro.serve.chaos``, where "worker" is
+reinterpreted as the event's magnitude knob and "step" is the engine
+decode-step index — see DESIGN.md "Serve robustness"):
+
+``qflood:N@S``      N extra requests burst-arrive at step S (prompt
+                    lengths/budgets drawn from the per-event generator).
+``stall:F@SxD``     decode dispatches run F× slower for the D steps
+                    starting at S (modeled through the engine's virtual
+                    cost model, so replay stays bit-identical).
+``cancel:K@S``      the K-th live request (by rid order; modulo live
+                    count) is cancelled at step S.
+``pagepress:N@SxD`` N pages are withheld from the allocator's free list
+                    at step S and released D steps later — the page-pool
+                    squeeze that drives brownout.
+
 The spec grammar above round-trips through :meth:`FaultPlan.from_spec` /
 :meth:`FaultPlan.to_spec` — it is what ``--fault-plan`` on the train
-launcher takes.
+launcher (train kinds) and serve launcher (serve kinds) take.
 """
 from __future__ import annotations
 
@@ -45,7 +60,10 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-KINDS = ("kill", "join", "straggle", "drop", "corrupt", "slow")
+KINDS = ("kill", "join", "straggle", "drop", "corrupt", "slow",
+         # serve-side kinds (repro.serve.chaos)
+         "qflood", "stall", "cancel", "pagepress")
+SERVE_KINDS = ("qflood", "stall", "cancel", "pagepress")
 
 
 @dataclass(frozen=True)
@@ -71,7 +89,7 @@ class FaultEvent:
 
     def to_spec(self) -> str:
         s = f"{self.kind}:{self.worker}@{self.step}"
-        if self.kind in ("straggle", "slow"):
+        if self.kind in ("straggle", "slow", "stall", "pagepress"):
             s += f"x{self.rounds}"
         return s
 

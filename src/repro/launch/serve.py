@@ -7,10 +7,19 @@
 ``--reference`` runs the old static-batch greedy path
 (``train.serve.generate``) instead — the parity oracle and the baseline
 ``bench_serve`` measures the engine against.
+
+SLO guardrails (DESIGN.md "Serve robustness"): ``--deadline-ms`` stamps a
+per-request budget (hopeless requests are shed, in-flight ones past
+deadline cancelled), ``--max-queue``/``--shed-policy`` bound the submit
+queue, ``--drain-on-sigterm PATH`` installs a SIGTERM handler that drains
+gracefully and snapshots unfinished work (restartable via the same path),
+and ``--fault-plan`` hands the run to the deterministic chaos loop
+(``repro.serve.chaos``) instead of the plain workload.
 """
 from __future__ import annotations
 
 import argparse
+import signal
 import time
 
 import jax
@@ -72,6 +81,24 @@ def main():
     ap.add_argument("--reference", action="store_true",
                     help="static-batch greedy generate() instead of the "
                          "engine")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request SLO budget: shed if unmeetable in "
+                         "queue, cancel in-flight past deadline")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bound the submit queue (0: unbounded); full "
+                         "queues reject with REJECTED_QUEUE_FULL")
+    ap.add_argument("--shed-policy", default="reject-newest",
+                    choices=["reject-newest", "reject-no-deadline"],
+                    help="who loses when the bounded queue overflows")
+    ap.add_argument("--drain-on-sigterm", default=None, metavar="SNAP",
+                    help="SIGTERM drains gracefully and snapshots "
+                         "unfinished work to SNAP (atomic+crc32); if SNAP "
+                         "exists at startup, queued work resumes from it")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC",
+                    help="run the deterministic serve chaos loop under "
+                         "this seeded FaultPlan instead of the plain "
+                         "workload (kinds: qflood/stall/cancel/pagepress, "
+                         "grammar kind:magnitude@step[xD])")
     ap.add_argument("--metrics-out", default=None, metavar="JSONL",
                     help="write telemetry metrics (schema'd JSONL: "
                          "prefill/decode throughput, TTFT, queue wait, "
@@ -114,15 +141,49 @@ def main():
               f"({done / dt:.1f} tok/s)")
         return
 
+    if args.fault_plan:
+        from repro.serve.chaos import main as chaos_main
+        chaos_main(["--arch", args.arch, "--fault-plan", args.fault_plan,
+                    "--seed", str(args.seed),
+                    "--requests", str(args.num_requests),
+                    "--max-slots", str(args.max_slots),
+                    "--page-size", str(args.page_size or 8),
+                    "--num-pages", str(args.num_pages),
+                    "--max-queue", str(args.max_queue or 16),
+                    "--shed-policy", args.shed_policy, "--replay"]
+                   + (["--metrics-out", args.metrics_out]
+                      if args.metrics_out else [])
+                   + (["--trace-out", args.trace_out]
+                      if args.trace_out else []))
+        return
+
     max_seq = args.max_seq or int((lens + news).max())
     eng = Engine(model, params, max_slots=args.max_slots, max_seq=max_seq,
                  prefill_chunk=args.prefill_chunk,
                  fused_sampling=args.fused_sampling,
                  page_size=args.page_size, num_pages=args.num_pages,
-                 prefix_cache=args.prefix_cache)
+                 prefix_cache=args.prefix_cache,
+                 max_queue=args.max_queue, shed_policy=args.shed_policy)
+    if args.drain_on_sigterm:
+        import os
+
+        def _drain(signum, frame):
+            snap = eng.drain(args.drain_on_sigterm)
+            print(f"SIGTERM: drained to {args.drain_on_sigterm} "
+                  f"({len(snap['queued']) + len(snap['inflight'])} "
+                  f"requests snapshotted)")
+            raise SystemExit(0)
+
+        signal.signal(signal.SIGTERM, _drain)
+        if os.path.exists(args.drain_on_sigterm):
+            resumed = eng.load_snapshot(args.drain_on_sigterm)
+            print(f"resumed {len(resumed)} queued requests from "
+                  f"{args.drain_on_sigterm}")
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p, seed=args.seed)
-    rids = [eng.submit(p, int(m), sp) for p, m in zip(prompts, news)]
+    rids = [eng.submit(p, int(m), sp, deadline_ms=args.deadline_ms)
+            for p, m in zip(prompts, news)]
+    rids = [r for r in rids if r]          # bounded queue may refuse some
     t0 = time.perf_counter()
     results = eng.run()
     dt = time.perf_counter() - t0
@@ -140,6 +201,13 @@ def main():
           f"{st.admissions} admitted / {st.evictions} evicted)")
     print(f"decode compiled {eng.trace_counts['decode']}x across "
           f"{st.steps} steps")
+    if args.deadline_ms is not None or args.max_queue:
+        print(f"guardrails: {st.goodput_tokens} tokens within deadline "
+              f"(goodput {st.goodput_tok_s():.1f} tok/s), {st.shed} shed, "
+              f"{st.cancelled} cancelled, {st.deadline_misses} deadline "
+              f"misses, {st.rejected_queue_full} queue-rejected, "
+              f"{st.watchdog_stalls} watchdog stalls, brownout clamped "
+              f"{st.brownout_clamped}")
     if eng.allocator is not None:
         al = eng.allocator
         print(f"paged cache: {eng.num_pages} pages x {eng.page_size} tok, "
@@ -147,7 +215,8 @@ def main():
               f"prefix hit-rate {al.hit_rate():.2f} "
               f"({al.hit_tokens} tok cached), {al.cow_copies} COW copies, "
               f"{al.evictions} cache evictions")
-    print("sample:", results[rids[0]][:16])
+    if rids:
+        print("sample:", results[int(rids[0])][:16])
     if args.metrics_out:
         telemetry.dump_metrics(args.metrics_out)
         print(f"metrics -> {args.metrics_out}")

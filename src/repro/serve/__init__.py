@@ -9,14 +9,24 @@ forced-decode loop, and per-request sampling is fused into the decode
 dispatch.
 
 - ``engine``    — :class:`Engine`: admission -> chunked prefill -> batched
-                  per-slot decode -> sampling -> eviction loop
-- ``scheduler`` — FIFO admission + slot lifecycle bookkeeping (host side)
+                  per-slot decode -> sampling -> eviction loop, plus the
+                  SLO guardrails (deadlines, bounded queue, brownout,
+                  watchdog) and graceful drain/restore
+- ``scheduler`` — FIFO admission + slot lifecycle bookkeeping (host side),
+                  typed :class:`AdmissionResult`, cancellation
 - ``cache``     — slot-indexed KV/SSM cache pool + mesh placement
 - ``sampling``  — fused greedy/temperature/top-k/top-p with per-request
                   parameters and per-slot PRNG keys
+- ``chaos``     — deterministic serve fault injection (seeded FaultPlan:
+                  qflood/stall/cancel/pagepress, bit-identical replay)
 """
 from repro.serve.engine import Engine, EngineStats
-from repro.serve.scheduler import Request, SamplingParams, SlotScheduler
+from repro.serve.scheduler import (ACCEPTED, AdmissionResult, FINISH_CANCEL,
+                                   FINISH_DEADLINE, FINISH_SHED, FINISH_STOP,
+                                   REJECTED_QUEUE_FULL, Request,
+                                   SamplingParams, SlotScheduler)
 
 __all__ = ["Engine", "EngineStats", "Request", "SamplingParams",
-           "SlotScheduler"]
+           "SlotScheduler", "AdmissionResult", "ACCEPTED",
+           "REJECTED_QUEUE_FULL", "FINISH_STOP", "FINISH_CANCEL",
+           "FINISH_DEADLINE", "FINISH_SHED"]

@@ -235,6 +235,8 @@ class PageAllocator:
         self._entries: dict[bytes, tuple[int, tuple]] = {}
         self._by_pid: dict[int, bytes] = {}
         self._lru: OrderedDict[bytes, None] = OrderedDict()
+        # pages withheld from circulation by fault injection (pagepress)
+        self.held: list[int] = []
         # counters (pages unless noted; read by EngineStats / bench)
         self.hits = 0
         self.lookups = 0
@@ -407,3 +409,76 @@ class PageAllocator:
             row[j] = NULL_PAGE
             self._unref(pid)
         self._reserved[slot] = 0
+
+    # -- fault injection: page-pool pressure --------------------------------
+
+    def hold_pages(self, n: int) -> int:
+        """Withhold up to ``n`` free pages from circulation (the
+        ``pagepress`` fault: a shrunken usable pool). Held pages vanish
+        from the free list — ``available()`` drops, ``occupancy()`` rises
+        (brownout sees real pressure) — and come back via
+        :meth:`release_held`. Takes from the free list's tail so the
+        allocation order of the surviving pages is unchanged (replay
+        determinism). Returns how many were actually held."""
+        took = 0
+        while self.free and took < n:
+            self.held.append(self.free.pop())
+            took += 1
+        return took
+
+    def release_held(self) -> int:
+        """Return every held page to the free list (tail, reversed — the
+        exact inverse of :meth:`hold_pages`)."""
+        n = len(self.held)
+        while self.held:
+            self.free.append(self.held.pop())
+        return n
+
+    # -- invariants ---------------------------------------------------------
+
+    def check_consistency(self) -> None:
+        """Assert the allocator's global refcount invariant:
+
+        every non-null page is exactly one of {free, held, live}, and a
+        live page's refcount equals its slot-table mappings plus its
+        prefix-cache hold — i.e. ``free + held + mapped/prefix-held +
+        null == num_pages`` with per-page refs exact. Raises
+        AssertionError with the first violation; any interleaving of
+        finish/cancel/evict/COW must keep this true (property-tested)."""
+        expect = np.zeros(self.num_pages, np.int64)
+        expect[NULL_PAGE] = 1                      # pinned
+        for row in self.tables:
+            for pid in row:
+                if pid != NULL_PAGE:
+                    expect[pid] += 1
+        for pid, _ in self._entries.values():
+            expect[pid] += 1
+        assert np.array_equal(self.refs, expect), (
+            f"refcount drift: refs={self.refs.tolist()} "
+            f"expected={expect.tolist()}")
+        free = set(self.free)
+        held = set(self.held)
+        assert len(free) == len(self.free), "duplicate page on free list"
+        assert len(held) == len(self.held), "duplicate held page"
+        assert not (free & held), "page both free and held"
+        assert NULL_PAGE not in free | held, "null page left the pool"
+        live = {pid for pid in range(self.num_pages)
+                if self.refs[pid] > 0}
+        assert not (live & (free | held)), (
+            f"referenced page on the free/held list: "
+            f"{sorted(live & (free | held))}")
+        assert len(free) + len(held) + len(live) == self.num_pages, (
+            f"page leak: {len(free)} free + {len(held)} held + "
+            f"{len(live)} live != {self.num_pages}")
+        assert self.refs[NULL_PAGE] == 1, "null page unpinned"
+        # prefix entries and the reverse index agree
+        assert ({pid for pid, _ in self._entries.values()}
+                == set(self._by_pid)), "prefix cache index drift"
+
+    def state_digest(self) -> tuple:
+        """Cheap structural fingerprint (tables, refs, free/held order,
+        reservations, prefix keys) — rejection paths must leave it
+        bit-identical (tested)."""
+        return (self.tables.tobytes(), self.refs.tobytes(),
+                tuple(self.free), tuple(self.held),
+                self._reserved.tobytes(), tuple(self._entries.keys()))

@@ -31,6 +31,12 @@ Design contract (the reason this engine never recompiles):
   the other slots are doing (MoE routes drop-free at decode/prefill;
   attention/SSM lanes are batch-independent) — the property the parity
   tests pin per family.
+- **SLO guardrails are host-side only.** Deadline shedding, in-flight
+  cancellation, the bounded queue, brownout degradation, the stuck-step
+  watchdog and drain/restore all live between dispatches — the jitted
+  decode/prefill programs are byte-identical with guardrails on or off
+  and still compile exactly once (tested). See DESIGN.md "Serve
+  robustness" for the deadline math and the brownout ladder.
 
 Sampling is fused into the decode dispatch: greedy/temperature/top-k/top-p
 with per-request parameters and per-slot PRNG keys in the same jit
@@ -44,7 +50,9 @@ lifecycle diagram.
 """
 from __future__ import annotations
 
+import json
 import time
+import zlib
 from collections import deque
 
 import jax
@@ -56,10 +64,24 @@ from repro.telemetry import anomaly, profile, trace
 from repro.telemetry.registry import Registry
 from repro.serve import cache as cache_mod
 from repro.serve import sampling as sampling_mod
-from repro.serve.scheduler import Request, SamplingParams, SlotScheduler
+from repro.serve.scheduler import (AdmissionResult, FINISH_SHED,
+                                   REJECTED_QUEUE_FULL, Request,
+                                   SamplingParams, SlotScheduler, SlotState)
 
 
 STATS_WINDOW = 4096   # decode steps of latency history kept for percentiles
+EWMA_ALPHA = 0.2      # step-time EWMA (the watchdog/deadline-estimate base)
+
+# brownout ladder thresholds on page-pool occupancy (DESIGN.md "Serve
+# robustness"): sustained occupancy >= HI1 enters level 1 (prefix-cache
+# registration off), >= HI2 level 2 (+ max_new clamp); dropping below LO
+# for the same patience leaves brownout entirely
+BROWNOUT_HI1 = 0.85
+BROWNOUT_HI2 = 0.95
+BROWNOUT_LO = 0.60
+BROWNOUT_PATIENCE = 3
+
+SNAPSHOT_SCHEMA = 1
 
 
 class EngineStats:
@@ -77,6 +99,13 @@ class EngineStats:
     Exact (non-bucketed) p50/p99 readbacks keep the bounded deque windows
     the old implementation used; the registry histograms carry the same
     observations for the JSONL view.
+
+    The guardrail layer adds shed/cancel/deadline-miss/queue-rejection
+    counters, queue-depth + brownout gauges, a goodput counter (tokens of
+    requests that finished inside their deadline), and ``step_ewma`` —
+    the always-live step-time EWMA the admission estimate and the stuck-
+    step watchdog read (the telemetry-gated PR 8 ``StreamDetector`` sees
+    the same stream when enabled).
     """
 
     def __init__(self):
@@ -91,9 +120,20 @@ class EngineStats:
         self._page_occupancy = r.gauge("serve/page_occupancy")
         self._prefix_hit_rate = r.gauge("serve/prefix_hit_rate")
         self._cow_copies = r.gauge("serve/cow_copies")
+        # SLO guardrails
+        self._shed = r.counter("serve/shed")
+        self._cancelled = r.counter("serve/cancelled")
+        self._deadline_miss = r.counter("serve/deadline_miss")
+        self._rejected_queue_full = r.counter("serve/rejected_queue_full")
+        self._watchdog_stalls = r.counter("serve/watchdog_stalls")
+        self._brownout_clamped = r.counter("serve/brownout_clamped")
+        self._goodput_tokens = r.counter("serve/goodput_tokens")
+        self._queue_depth = r.gauge("serve/queue_depth")
+        self._brownout_level = r.gauge("serve/brownout_level")
         self._h_step = r.histogram("serve/step_time_s")
         self._h_ttft = r.histogram("serve/ttft_s")
         self._h_queue = r.histogram("serve/queue_wait_s")
+        self.step_ewma: float | None = None   # warm steps only
         # bounded windows (a long-running server must not grow per step):
         # seconds per dispatch / live tokens per dispatch / per-request
         self.step_times: deque = deque(maxlen=STATS_WINDOW)
@@ -123,9 +163,45 @@ class EngineStats:
         self._h_step.observe(dt)
         self.step_times.append(dt)
         self.step_tokens.append(n_active)
+        if self.steps > 1:       # step 1 was the compile dispatch
+            self.step_ewma = (dt if self.step_ewma is None
+                              else EWMA_ALPHA * dt
+                              + (1 - EWMA_ALPHA) * self.step_ewma)
 
     def record_evictions(self, n: int) -> None:
         self._evictions.inc(n)
+
+    def record_finish(self, ev: dict) -> None:
+        """Fold one scheduler finish-log event into the SLO counters."""
+        if ev["slot"] is not None:
+            self._evictions.inc()
+        reason = ev["reason"]
+        if reason == "cancel":
+            self._cancelled.inc()
+        elif reason == "shed":
+            self._shed.inc()
+        if ev["had_deadline"]:
+            if reason == "stop" and ev["within_deadline"]:
+                self._goodput_tokens.inc(ev["tokens"])
+            else:
+                self._deadline_miss.inc()
+        elif reason == "stop":
+            self._goodput_tokens.inc(ev["tokens"])
+
+    def record_rejection(self) -> None:
+        self._rejected_queue_full.inc()
+
+    def record_watchdog(self) -> None:
+        self._watchdog_stalls.inc()
+
+    def record_brownout_clamp(self) -> None:
+        self._brownout_clamped.inc()
+
+    def set_queue_depth(self, n: int) -> None:
+        self._queue_depth.set(n)
+
+    def set_brownout_level(self, level: int) -> None:
+        self._brownout_level.set(level)
 
     def set_page_stats(self, occupancy: float, hit_rate: float,
                        cow: int) -> None:
@@ -180,11 +256,48 @@ class EngineStats:
     def cow_copies(self) -> int:
         return int(self._cow_copies.value)
 
+    @property
+    def shed(self) -> int:
+        return self._shed.value
+
+    @property
+    def cancelled(self) -> int:
+        return self._cancelled.value
+
+    @property
+    def deadline_misses(self) -> int:
+        return self._deadline_miss.value
+
+    @property
+    def rejected_queue_full(self) -> int:
+        return self._rejected_queue_full.value
+
+    @property
+    def watchdog_stalls(self) -> int:
+        return self._watchdog_stalls.value
+
+    @property
+    def brownout_clamped(self) -> int:
+        return self._brownout_clamped.value
+
+    @property
+    def goodput_tokens(self) -> int:
+        return self._goodput_tokens.value
+
+    @property
+    def brownout_level(self) -> int:
+        return int(self._brownout_level.value)
+
     def prefill_tok_s(self) -> float:
         return self.prefill_tokens / max(self.prefill_time, 1e-9)
 
     def decode_tok_s(self) -> float:
         return self.decoded_tokens / max(self.decode_time, 1e-9)
+
+    def goodput_tok_s(self) -> float:
+        """Tokens delivered within deadline per second of engine time."""
+        return (self.goodput_tokens
+                / max(self.decode_time + self.prefill_time, 1e-9))
 
     def token_latency_percentiles(self, qs=(50, 99)) -> dict:
         """Per-token latency over the stats window: each live token in a
@@ -218,7 +331,11 @@ class Engine:
                  mesh=None, fused_sampling: bool = False,
                  unroll: bool = False, attn_impl: str | None = None,
                  page_size: int = 16, num_pages: int = 0,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 max_queue: int = 0, shed_policy: str = "reject-newest",
+                 watchdog_k: float = 6.0, brownout: bool = True,
+                 brownout_max_new: int = 16, finished_keep: int = 4096,
+                 guardrails: bool = True, clock=None, cost_model=None):
         """``page_size`` > 0 (the default) runs the paged KV cache: slots
         share a physical page pool through block tables, sized by
         ``num_pages`` (0 = worst-case auto: every slot can still reach
@@ -226,7 +343,23 @@ class Engine:
         the parity oracle and the A/B baseline for density benchmarks.
         ``prefix_cache`` hands shared page-aligned prompt prefixes to new
         requests by refcount (attention families only; SSM state is not
-        reconstructible from cache pages, so it is ignored there)."""
+        reconstructible from cache pages, so it is ignored there).
+
+        SLO guardrails (all host-side; see DESIGN.md "Serve robustness"):
+        ``max_queue`` bounds the submit queue (0 = unbounded) with
+        ``shed_policy`` deciding who loses on overflow; requests may carry
+        ``deadline_ms``/``max_queue_ms`` budgets — hopeless queued
+        requests are shed at admission time and in-flight requests past
+        deadline are cancelled at step boundaries; ``watchdog_k`` flags a
+        decode dispatch slower than k x the step-time EWMA; ``brownout``
+        degrades service under sustained page-pool pressure (prefix-cache
+        registration off, then ``max_new`` clamped to
+        ``brownout_max_new``) before admissions start blocking.
+        ``guardrails=False`` disables all enforcement (budgets are still
+        recorded, so goodput can be measured post-hoc — the A/B baseline).
+        ``clock``/``cost_model`` are the determinism seams
+        ``repro.serve.chaos`` drives virtual time through; production
+        leaves both at None (wall clock)."""
         cfg = model.cfg
         if cfg.family != "decoder":
             raise ValueError(f"serve engine supports decoder models, "
@@ -261,6 +394,16 @@ class Engine:
         self.mesh = mesh
         self.fused_sampling = fused_sampling
         self.unroll = unroll
+        self.guardrails = guardrails
+        self.watchdog_k = watchdog_k
+        self.brownout = brownout and guardrails
+        self.brownout_max_new = brownout_max_new
+        self._brownout_level = 0
+        self._hot = [0, 0]       # consecutive steps above HI1 / HI2
+        self._cool = 0           # consecutive steps below LO
+        self.draining = False
+        self._clock = clock or time.perf_counter
+        self._cost_model = cost_model
         self.trace_counts = {"prefill": 0, "decode": 0, "sample": 0}
 
         if mesh is not None:
@@ -274,6 +417,9 @@ class Engine:
                           and cfg.attention is not None)
         self.page_size = page_size if self.paged else 0
         self.allocator = None
+        sched_kw = dict(max_queue=max_queue if guardrails else 0,
+                        shed_policy=shed_policy,
+                        finished_keep=finished_keep, clock=self._clock)
         if self.paged:
             pps = max_seq // page_size
             if num_pages <= 0:
@@ -290,18 +436,17 @@ class Engine:
                 num_pages, page_size, max_slots, pps,
                 prefix_cache=prefix_cache and cfg.ssm is None)
             self.sched = SlotScheduler(max_slots, max_seq,
-                                       allocator=self.allocator)
+                                       allocator=self.allocator, **sched_kw)
         else:
             self.num_pages = 0
             self.pool = cache_mod.place_pool(
                 mesh, cache_mod.make_pool(model, max_slots, max_seq),
                 max_slots)
-            self.sched = SlotScheduler(max_slots, max_seq)
+            self.sched = SlotScheduler(max_slots, max_seq, **sched_kw)
         # block tables enter every dispatch as one same-shaped int32 array
         # (a (1, 1) dummy keeps the contiguous signature stable)
         self._no_tables = jnp.zeros((1, 1), jnp.int32)
         self.stats = EngineStats()
-        self._finished_seen = 0      # eviction accounting watermark
         if telemetry.enabled():
             telemetry.attach_registry(self.stats.registry)
 
@@ -403,15 +548,40 @@ class Engine:
 
     def submit(self, tokens, max_new: int,
                sampling: SamplingParams | None = None,
-               eos: int | None = None) -> int:
+               eos: int | None = None, *,
+               deadline_ms: float | None = None,
+               max_queue_ms: float | None = None) -> AdmissionResult:
+        """Queue a request. Returns a typed :class:`AdmissionResult` that
+        coerces to the request id when accepted; a full bounded queue (or
+        a draining engine) rejects with zero state mutated. Malformed or
+        never-fits requests still raise ``ValueError``."""
         sampling = sampling or SamplingParams()
         if self.fused_sampling and sampling_mod.needs_full_path(sampling):
             raise ValueError("fused_sampling engine handles greedy/"
                              "temperature only; top-k/top-p need the full "
                              "path (fused_sampling=False)")
+        if self.draining:
+            self.stats.record_rejection()
+            return AdmissionResult(-1, REJECTED_QUEUE_FULL,
+                                   "engine draining")
         req = Request(tokens=list(map(int, tokens)), max_new=max_new,
-                      sampling=sampling, eos=eos)
-        return self.sched.submit(req)
+                      sampling=sampling, eos=eos, deadline_ms=deadline_ms,
+                      max_queue_ms=max_queue_ms)
+        res = self.sched.submit(req)
+        if not res:
+            self.stats.record_rejection()
+        self._account_finished()    # a displaced victim (reject-no-deadline)
+        self.stats.set_queue_depth(self.sched.queue_depth)
+        return res
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request wherever it is (queued or in-flight); pages and
+        refcounts are released exactly as on a natural finish. Returns
+        False for unknown/finished rids."""
+        ok = self.sched.cancel(rid)
+        if ok:
+            self._account_finished()
+        return ok
 
     def _bind_slot(self, slot: int, req: Request) -> None:
         s = req.sampling
@@ -448,7 +618,7 @@ class Engine:
         # write COWs the shared final page, keeping the cached copy clean)
         hit = self.sched.slots[slot].hit_tokens
         start = S0 - 1 if hit >= S0 else hit
-        t0 = time.perf_counter()
+        t0 = self._clock()
         with trace.span("serve/prefill", slot=slot, rid=req.rid, tokens=S0,
                         cached=hit):
             if self.cfg.ssm is not None:
@@ -468,17 +638,21 @@ class Engine:
                     sl = np.pad(sl, (0, C - valid))
                 if self.paged:
                     self._make_writable(slot, c, c + valid)
-                t_c = time.perf_counter()
+                t_c = self._clock()
                 self.pool, logits = self._prefill(
                     self.params, self.pool, jnp.asarray(sl[None]),
                     jnp.int32(slot), jnp.int32(c), jnp.int32(valid),
                     self._tables())
+                if self._cost_model is not None:
+                    self._clock.advance(self._cost_model("prefill_chunk", C))
                 if self._prefill_warm:
                     profile.observe("serve/prefill_chunk",
-                                    time.perf_counter() - t_c)
+                                    self._clock() - t_c)
                 else:
                     self._prefill_warm = True
-            if self.allocator is not None:
+            if self.allocator is not None and self._brownout_level < 1:
+                # brownout level >= 1 stops publishing new prefixes —
+                # cache holds are exactly the pressure being shed
                 self.allocator.register_prefix(slot, toks)
             tok, k_next = self._sample_prefill(
                 logits, jnp.int32(valid),
@@ -488,30 +662,106 @@ class Engine:
                 self._keys[slot])
             tok = int(tok)
         self._keys = self._keys.at[slot].set(k_next)
-        self.stats.record_prefill(S0 - start, time.perf_counter() - t0)
+        self.stats.record_prefill(S0 - start, self._clock() - t0)
         self.sched.record_first_token(slot, tok)
         self.stats.record_first_token(req.ttft)
 
     def _account_finished(self) -> None:
-        """Fold newly finished requests into the eviction counter (a finish
-        frees — evicts — its slot mid-flight)."""
-        n = len(self.sched.finished)
-        if n > self._finished_seen:
-            self.stats.record_evictions(n - self._finished_seen)
-            self._finished_seen = n
+        """Drain the scheduler's finish-event stream into the stats —
+        evictions (a finish/cancel frees its slot mid-flight), shed/cancel
+        counters, deadline misses and goodput. Event-driven, so it
+        survives ``pop_finished`` hand-offs and drain/restore cycles (the
+        old ``len(finished)`` watermark did not)."""
+        while self.sched.finish_log:
+            self.stats.record_finish(self.sched.finish_log.popleft())
+
+    # -- SLO guardrails (all host-side, between dispatches) -----------------
+
+    def _estimate_service_s(self, req: Request) -> float:
+        """Cheap admission-time completion estimate from measured rates:
+        prompt tokens over the prefill rate plus ``max_new`` decode steps
+        at the step-time EWMA. Unmeasured components contribute 0 — a
+        cold engine never sheds on a blind guess."""
+        est = 0.0
+        st = self.stats
+        if st.prefill_tokens > 0 and st.prefill_time > 0:
+            est += len(req.tokens) / st.prefill_tok_s()
+        if st.step_ewma is not None:
+            est += req.max_new * st.step_ewma
+        return est
+
+    def _shed_hopeless(self, now: float) -> None:
+        """Shed queued requests whose queue budget is blown or whose
+        deadline can no longer be met (anywhere in the queue — an
+        impossible head must not block feasible work behind it)."""
+        for req in list(self.sched.pending):
+            over_queue = (req.max_queue_ms is not None
+                          and now - req.t_submit > req.max_queue_ms / 1e3)
+            dl = req.deadline_at
+            hopeless = (dl is not None
+                        and now + self._estimate_service_s(req) > dl)
+            if over_queue or hopeless:
+                self.sched.shed_queued(req, FINISH_SHED)
+                trace.instant("serve/shed", rid=req.rid,
+                              why="queue_budget" if over_queue
+                              else "deadline_unmeetable")
+
+    def _update_brownout(self, occupancy: float) -> None:
+        """Walk the brownout ladder on sustained page-pool pressure:
+        level 1 stops prefix-cache registration, level 2 additionally
+        clamps new admissions' ``max_new`` — degradation before refusal.
+        Hysteresis: entering needs ``BROWNOUT_PATIENCE`` consecutive hot
+        steps, leaving needs the same below the low watermark."""
+        if occupancy >= BROWNOUT_HI1:
+            self._hot[0] += 1
+            self._hot[1] = self._hot[1] + 1 if occupancy >= BROWNOUT_HI2 \
+                else 0
+            self._cool = 0
+        else:
+            self._hot = [0, 0]
+            self._cool = self._cool + 1 if occupancy < BROWNOUT_LO else 0
+        if self._hot[1] >= BROWNOUT_PATIENCE:
+            level = 2
+        elif self._hot[0] >= BROWNOUT_PATIENCE:
+            level = max(self._brownout_level, 1)
+        elif self._cool >= BROWNOUT_PATIENCE:
+            level = 0
+        else:
+            level = self._brownout_level
+        if level != self._brownout_level:
+            trace.instant("serve/brownout", level=level,
+                          occupancy=round(occupancy, 3))
+        self._brownout_level = level
+        self.stats.set_brownout_level(level)
+        if level >= 2:
+            for req in self.sched.pending:
+                if req.max_new > self.brownout_max_new:
+                    req.max_new = self.brownout_max_new
+                    self.stats.record_brownout_clamp()
 
     def step(self) -> int:
         """Admit + prefill new requests, run one decode dispatch over the
         pool. Returns the number of live tokens produced."""
-        for slot, req in self.sched.admit():
-            self.stats.record_admission(req.queue_wait)
-            self._prefill_request(slot, req)
+        now = self._clock()
+        if self.guardrails:
+            if not self.draining:
+                self._shed_hopeless(now)
+            for rid in self.sched.cancel_past_deadline(now):
+                trace.instant("serve/deadline_cancel", rid=rid)
+        self._account_finished()
+        if not self.draining:
+            for slot, req in self.sched.admit():
+                self.stats.record_admission(req.queue_wait)
+                self._prefill_request(slot, req)
         self._account_finished()       # max_new=1/eos at first token
         n_active = self.sched.num_active
+        self.stats.set_queue_depth(self.sched.queue_depth)
         if self.allocator is not None:
-            self.stats.set_page_stats(self.allocator.occupancy(),
-                                      self.allocator.hit_rate(),
+            occ = self.allocator.occupancy()
+            self.stats.set_page_stats(occ, self.allocator.hit_rate(),
                                       self.allocator.cow_copies)
+            if self.brownout:
+                self._update_brownout(occ)
         else:
             self.stats.set_page_stats(n_active / self.max_slots, 0.0, 0)
         if n_active == 0:
@@ -526,17 +776,28 @@ class Engine:
         tokens = jnp.asarray(self.sched.feed_tokens(),
                              jnp.int32)[:, None]
         pos = jnp.asarray(self.sched.positions(), jnp.int32)
-        t0 = time.perf_counter()
+        ewma_prior = self.stats.step_ewma
+        t0 = self._clock()
         with trace.span("serve/decode_step", active=n_active):
             self.pool, tok, self._keys = self._decode(
                 self.params, self.pool, tokens, pos,
                 jnp.asarray(self._temps), jnp.asarray(self._top_ks),
                 jnp.asarray(self._top_ps), self._keys, self._tables())
             tok = np.asarray(tok)                     # sync point
-        dt = time.perf_counter() - t0
+        if self._cost_model is not None:
+            self._clock.advance(self._cost_model("decode", n_active))
+        dt = self._clock() - t0
         if self.stats.steps > 0:     # step 0 is the compile dispatch
             profile.observe("serve/decode_step", dt)
             self._det_step.observe(dt)
+            if (self.guardrails and ewma_prior is not None
+                    and dt > self.watchdog_k * ewma_prior):
+                # the stuck-step watchdog: this dispatch blew far past the
+                # EWMA the anomaly detector tracks — flag it (host-side;
+                # a wedged device shows up here before anything else)
+                self.stats.record_watchdog()
+                trace.instant("serve/watchdog_stall", dt=round(dt, 6),
+                              ewma=round(ewma_prior, 6), k=self.watchdog_k)
         self.sched.record_step(tok)
         self._account_finished()
         self.stats.record_decode(n_active, dt)
@@ -547,6 +808,90 @@ class Engine:
         while self.sched.has_work():
             self.step()
         return self.sched.results()
+
+    # -- graceful drain + crash-safe restore --------------------------------
+
+    def drain(self, path: str | None = None, *,
+              max_steps: int | None = None) -> dict:
+        """Graceful drain: stop admitting, finish what's in flight (up to
+        ``max_steps`` dispatches), snapshot the host-side request state.
+        Queued — and any still-unfinished in-flight — requests are
+        recorded by prompt; a restored engine re-runs them from scratch,
+        which is bit-identical for greedy (and for seeded sampling) decode.
+        ``path`` writes the snapshot crash-safely (temp file + fsync +
+        atomic rename, crc32-stamped — the PR 7 checkpoint idiom)."""
+        self.draining = True
+        steps = 0
+        while (self.sched.num_active > 0
+               and (max_steps is None or steps < max_steps)):
+            self.step()
+            steps += 1
+        self._account_finished()
+        snap = self._snapshot()
+        if path is not None:
+            payload = json.dumps(snap, sort_keys=True).encode()
+            from repro.checkpoint.ckpt import _atomic_write
+            _atomic_write(path, json.dumps(
+                {"schema": SNAPSHOT_SCHEMA, "crc": zlib.crc32(payload),
+                 "payload": snap}, sort_keys=True).encode())
+        trace.instant("serve/drain", steps=steps,
+                      queued=len(snap["queued"]),
+                      inflight=len(snap["inflight"]))
+        return snap
+
+    def _snapshot(self) -> dict:
+        sched = self.sched
+        return {
+            "rid_next": sched._next_rid,
+            "queued": [r.to_state() for r in sched.pending],
+            "inflight": [st.req.to_state() for st in sched.slots
+                         if st is not None],
+            "finished": [{"req": st.req.to_state(),
+                          "generated": list(st.generated),
+                          "reason": st.req.finish_reason}
+                         for st in sched.finished.values()],
+            "finished_total": sched.finished_total,
+            "finished_dropped": sched.finished_dropped,
+        }
+
+    def load_snapshot(self, path_or_snap) -> list:
+        """Restore a drained engine's unfinished work into THIS (freshly
+        constructed) engine: finished results come back verbatim, queued
+        and interrupted in-flight requests are re-queued under their
+        original rids (outputs stay keyed identically; deadlines restart
+        from now). Returns the re-queued rids. A corrupt snapshot file
+        fails loudly (crc32 mismatch)."""
+        if isinstance(path_or_snap, str):
+            with open(path_or_snap, "rb") as f:
+                wrapper = json.load(f)
+            payload = json.dumps(wrapper["payload"], sort_keys=True).encode()
+            if zlib.crc32(payload) != wrapper["crc"]:
+                raise ValueError(
+                    f"serve snapshot {path_or_snap!r} failed its crc32 "
+                    f"integrity check")
+            snap = wrapper["payload"]
+        else:
+            snap = path_or_snap
+        sched = self.sched
+        if sched.finished or sched.has_work():
+            raise ValueError("load_snapshot needs a fresh engine")
+        for ent in snap["finished"]:
+            req = Request.from_state(ent["req"])
+            req.finish_reason = ent["reason"]
+            sched.finished[req.rid] = SlotState(
+                req=req, generated=list(ent["generated"]), done=True)
+        sched.finished_total = int(snap["finished_total"])
+        sched.finished_dropped = int(snap["finished_dropped"])
+        sched._next_rid = int(snap["rid_next"])
+        requeued = []
+        # interrupted in-flight requests re-run from their prompts, ahead
+        # of the still-queued tail — the original FIFO order survives
+        for ent in snap["inflight"] + snap["queued"]:
+            req = Request.from_state(ent)
+            sched.resubmit(req)
+            requeued.append(req.rid)
+        self.stats.set_queue_depth(sched.queue_depth)
+        return requeued
 
     def reset_stats(self) -> None:
         """Zero the timing stats (post-warmup). ``trace_counts`` is *not*

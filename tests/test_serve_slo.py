@@ -1,0 +1,515 @@
+"""Serve-side SLO guardrails: typed admission, deadlines + cancellation,
+bounded queue + shedding policies, brownout, the stuck-step watchdog,
+graceful drain/restore, chaos replay determinism, and the page-accounting
+invariants every one of those paths must preserve.
+
+The non-negotiables pinned here: rejections mutate nothing; cancel
+releases pages exactly as finish does (refcounts partition the pool under
+any interleaving); jitted decode/prefill are byte-identical with
+guardrails on or off and compile exactly once; drain->restore and chaos
+replay are bit-identical."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.fault.inject import SERVE_KINDS, FaultPlan
+from repro.models import build_model
+from repro.serve import (ACCEPTED, AdmissionResult, Engine,
+                         REJECTED_QUEUE_FULL, Request, SamplingParams,
+                         SlotScheduler)
+from repro.serve.chaos import (VirtualClock, make_cost_model, run_chaos,
+                               verify_drain_restore, verify_replay)
+
+
+@functools.lru_cache(maxsize=None)
+def _setup(arch="llama3.2-1b"):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _engine(**over):
+    cfg, model, params = _setup()
+    kw = dict(max_slots=3, max_seq=64, prefill_chunk=8, page_size=8)
+    kw.update(over)
+    return Engine(model, params, **kw)
+
+
+# ---------------------------------------------------------------------------
+# AdmissionResult: typed, back-compatible, zero-mutation rejections
+# ---------------------------------------------------------------------------
+
+def test_admission_result_coerces_to_rid():
+    """Accepted results behave like the int rid they used to be: dict
+    key, equality, int()."""
+    sched = SlotScheduler(2, 32)
+    r = sched.submit(Request(tokens=[1, 2], max_new=2))
+    assert r.accepted and bool(r) and r.status == ACCEPTED
+    assert int(r) == 0 and r == 0 and hash(r) == hash(0)
+    assert {r: "x"}[0] == "x" and {0: "y"}[r] == "y"
+
+
+def test_queue_full_rejection_is_typed_not_raised():
+    sched = SlotScheduler(1, 32, max_queue=2)
+    assert sched.submit(Request(tokens=[1], max_new=1))
+    assert sched.submit(Request(tokens=[2], max_new=1))
+    r = sched.submit(Request(tokens=[3], max_new=1))
+    assert not r and r.status == REJECTED_QUEUE_FULL and int(r) == -1
+    # malformed requests are caller bugs, still exceptions:
+    with pytest.raises(ValueError, match="empty"):
+        sched.submit(Request(tokens=[], max_new=1))
+    with pytest.raises(ValueError, match="max_new"):
+        sched.submit(Request(tokens=[1], max_new=0))
+
+
+def test_rejection_paths_mutate_nothing():
+    """Every refusal — queue-full at submit, draining, page-gated
+    try_admit — leaves allocator + queue state byte-identical."""
+    eng = _engine(max_queue=2, num_pages=10)
+    assert eng.submit([1, 2, 3], 4)
+    assert eng.submit([4, 5, 6], 4)
+    before = eng.allocator.state_digest()
+    pend = list(eng.sched.pending)
+    r = eng.submit([7, 8, 9], 4)           # queue full
+    assert not r and r.status == REJECTED_QUEUE_FULL
+    assert eng.allocator.state_digest() == before
+    assert list(eng.sched.pending) == pend
+    eng.draining = True
+    r2 = eng.submit([7, 8], 2)             # draining
+    assert not r2 and eng.allocator.state_digest() == before
+    eng.draining = False
+    assert eng.stats.rejected_queue_full == 2
+    # page-gated head-of-line block: 10-page pool (9 usable), two requests
+    # each needing 2 pages admit, a third stays queued without any
+    # allocator mutation while blocked
+    eng.run()
+    big = _engine(max_slots=2, num_pages=5)        # 4 usable pages
+    big.submit([1] * 8, 8)                         # 2 pages
+    big.submit([2] * 8, 8)                         # 2 pages
+    big.step()
+    digest = big.allocator.state_digest()
+    r3 = big.submit([3] * 8, 8)                    # queued, cannot admit
+    assert r3.accepted                             # queue is unbounded
+    big.step()                                     # try_admit refuses
+    assert big.sched.queue_depth == 1
+    tbl, refs, free, held, resv, pfx = big.allocator.state_digest()
+    assert (refs, free, held, pfx) == (digest[1], digest[2], digest[3],
+                                       digest[5])
+
+
+def test_never_fits_requests_still_raise():
+    eng = _engine()
+    with pytest.raises(ValueError, match="cache rows"):
+        eng.submit(list(range(60)), 30)
+    small = _engine(num_pages=4)                   # 3 usable pages
+    with pytest.raises(ValueError, match="pages"):
+        small.submit(list(range(30)), 10)          # 40 rows = 5 pages
+
+
+# ---------------------------------------------------------------------------
+# deadlines: queued shed, in-flight cancel, estimates
+# ---------------------------------------------------------------------------
+
+def test_expired_queued_request_is_shed_not_run():
+    clock = VirtualClock()
+    eng = _engine(clock=clock, cost_model=make_cost_model()[0],
+                  max_slots=1)
+    a = eng.submit([1, 2, 3], 4)                   # occupies the only slot
+    b = eng.submit([4, 5, 6], 4, deadline_ms=5.0)  # cannot start in time
+    clock.advance(0.02)                            # 20ms >> 5ms budget
+    eng.step()
+    reasons = eng.sched.finish_reasons()
+    assert reasons[int(b)] == "shed"
+    assert eng.sched.results()[int(b)] == []       # never decoded
+    eng.run()
+    assert eng.sched.finish_reasons()[int(a)] == "stop"
+    assert eng.stats.shed == 1 and eng.stats.deadline_misses == 1
+
+
+def test_queue_budget_max_queue_ms_sheds():
+    clock = VirtualClock()
+    eng = _engine(clock=clock, cost_model=make_cost_model()[0],
+                  max_slots=1)
+    eng.submit([1, 2, 3], 8)
+    b = eng.submit([4, 5], 4, max_queue_ms=1.0)
+    clock.advance(0.01)
+    eng.step()
+    assert eng.sched.finish_reasons()[int(b)] == "shed"
+
+
+def test_inflight_past_deadline_cancelled_at_step_boundary():
+    """A running request whose deadline lapses is evicted mid-flight with
+    reason 'deadline'; its partial output is kept and its pages return to
+    the free list (same release path as finish)."""
+    clock = VirtualClock()
+    eng = _engine(clock=clock, cost_model=make_cost_model()[0])
+    r = eng.submit([1, 2, 3, 4], 32, deadline_ms=30.0)
+    for _ in range(3):
+        eng.step()
+    got = len(eng.sched.slots[0].generated) if eng.sched.slots[0] else 0
+    clock.advance(10.0)                            # blow way past deadline
+    eng.step()
+    assert eng.sched.finish_reasons()[int(r)] == "deadline"
+    assert 0 < len(eng.sched.results()[int(r)]) < 32
+    assert eng.sched.num_active == 0
+    eng.allocator.check_consistency()
+    assert eng.stats.deadline_misses == 1
+    # the freed slot is immediately reusable
+    r2 = eng.submit([5, 6], 2)
+    eng.run()
+    assert eng.sched.finish_reasons()[int(r2)] == "stop"
+
+
+def test_cold_engine_never_sheds_on_blind_estimate():
+    """With no measured rates (fresh engine), the admission estimate is 0:
+    a tight-but-not-yet-expired deadline must not shed at submit time."""
+    eng = _engine()
+    r = eng.submit([1, 2], 2, deadline_ms=60_000.0)
+    eng.step()
+    assert int(r) not in eng.sched.finish_reasons() \
+        or eng.sched.finish_reasons()[int(r)] == "stop"
+
+
+def test_cancel_api_queued_and_inflight():
+    eng = _engine(max_slots=1)
+    a = eng.submit([1, 2, 3], 16)
+    b = eng.submit([4, 5, 6], 4)
+    eng.step()                                     # a running, b queued
+    assert eng.cancel(int(b)) is True              # queued -> shed path
+    assert eng.cancel(int(a)) is True              # in-flight -> evicted
+    assert eng.cancel(999) is False
+    assert eng.cancel(int(a)) is False             # already terminal
+    reasons = eng.sched.finish_reasons()
+    assert reasons[int(a)] == "cancel" and reasons[int(b)] == "cancel"
+    eng.allocator.check_consistency()
+    assert eng.stats.cancelled == 2
+
+
+# ---------------------------------------------------------------------------
+# bounded queue + shedding policy
+# ---------------------------------------------------------------------------
+
+def test_shed_policy_reject_no_deadline_displaces_youngest():
+    sched = SlotScheduler(1, 64, max_queue=3,
+                          shed_policy="reject-no-deadline")
+    a = sched.submit(Request(tokens=[1], max_new=1, deadline_ms=50.0))
+    b = sched.submit(Request(tokens=[2], max_new=1))          # no deadline
+    c = sched.submit(Request(tokens=[3], max_new=1))          # no deadline
+    d = sched.submit(Request(tokens=[4], max_new=1, deadline_ms=9.0))
+    assert d.accepted
+    # c (youngest without a deadline) was displaced, b survives
+    assert [r.rid for r in sched.pending] == [int(a), int(b), int(d)]
+    assert sched.finish_reasons()[int(c)] == "shed"
+    e = sched.submit(Request(tokens=[5], max_new=1, deadline_ms=7.0))
+    assert e.accepted and sched.finish_reasons()[int(b)] == "shed"
+    # every queued request now carries a deadline: fall back to
+    # reject-newest — the arrival is refused, the queue untouched
+    f = sched.submit(Request(tokens=[6], max_new=1, deadline_ms=5.0))
+    assert not f and f.status == REJECTED_QUEUE_FULL
+    assert [r.rid for r in sched.pending] == [int(a), int(d), int(e)]
+
+
+def test_shed_policy_validated():
+    with pytest.raises(ValueError, match="shed_policy"):
+        SlotScheduler(1, 32, shed_policy="lifo")
+
+
+# ---------------------------------------------------------------------------
+# brownout ladder
+# ---------------------------------------------------------------------------
+
+def test_brownout_ladder_hysteresis_and_clamp():
+    eng = _engine()
+    # sustained level-1 pressure: registration off after patience steps
+    for _ in range(3):
+        eng._update_brownout(0.90)
+    assert eng._brownout_level == 1
+    # a single cool step does not leave brownout (hysteresis)
+    eng._update_brownout(0.40)
+    assert eng._brownout_level == 1
+    for _ in range(2):
+        eng._update_brownout(0.40)
+    assert eng._brownout_level == 0
+    # level 2 clamps queued admissions' max_new
+    eng.submit([1, 2, 3], 40)
+    for _ in range(3):
+        eng._update_brownout(0.97)
+    assert eng._brownout_level == 2
+    assert eng.sched.pending[0].max_new == eng.brownout_max_new
+    assert eng.stats.brownout_clamped == 1
+    assert eng.stats.brownout_level == 2
+
+
+def test_brownout_level1_disables_prefix_registration():
+    eng = _engine()
+    eng._brownout_level = 1
+    eng.submit([7] * 16, 2)
+    eng.run()
+    assert len(eng.allocator._entries) == 0        # nothing published
+    eng._brownout_level = 0
+    eng.submit([7] * 16, 2)
+    eng.run()
+    assert len(eng.allocator._entries) > 0
+
+
+# ---------------------------------------------------------------------------
+# watchdog
+# ---------------------------------------------------------------------------
+
+def test_watchdog_flags_stalled_step():
+    clock = VirtualClock()
+    cost, state = make_cost_model()
+    eng = _engine(clock=clock, cost_model=cost, watchdog_k=4.0)
+    eng.submit([1, 2, 3], 24)
+    for _ in range(6):                             # warm the EWMA
+        eng.step()
+    assert eng.stats.watchdog_stalls == 0
+    state["stall_factor"] = 50.0                   # one wedged dispatch
+    eng.step()
+    assert eng.stats.watchdog_stalls == 1
+    state["stall_factor"] = 1.0
+    eng.run()
+
+
+# ---------------------------------------------------------------------------
+# bounded finished map + pop_finished hand-off
+# ---------------------------------------------------------------------------
+
+def test_finished_retention_bounded_and_accounting_survives():
+    sched = SlotScheduler(1, 64, finished_keep=4)
+    for i in range(10):
+        r = sched.submit(Request(tokens=[1, 2], max_new=1))
+        sched.admit()
+        sched.record_first_token(0, 5)             # max_new=1: finishes
+    assert len(sched.finished) == 4                # newest kept
+    assert sched.finished_total == 10 and sched.finished_dropped == 6
+    popped = sched.pop_finished()
+    assert len(popped) == 4 and len(sched.finished) == 0
+    # monotonic accounting is unaffected by the hand-off
+    assert sched.finished_total == 10
+    sched.submit(Request(tokens=[3], max_new=1))
+    sched.admit()
+    sched.record_first_token(0, 5)
+    assert sched.finished_total == 11
+
+
+def test_engine_eviction_accounting_survives_pop(tmp_path):
+    """The old len(finished) watermark broke the eviction counter the
+    moment results were handed off; the finish-log stream does not."""
+    eng = _engine()
+    eng.submit([1, 2], 2)
+    eng.run()
+    assert eng.stats.evictions == 1
+    eng.sched.pop_finished()
+    eng.submit([3, 4], 2)
+    eng.run()
+    assert eng.stats.evictions == 2
+
+
+# ---------------------------------------------------------------------------
+# page-accounting invariants under adversarial interleavings
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_refcounts_partition_pool_under_interleaving(seed):
+    """Property test: any interleaving of submit / step / cancel / finish
+    / COW (shared-prefix hits force copy-on-write) keeps the allocator
+    partition exact — free + held + live == num_pages, refs recomputable
+    from tables + prefix entries, null page pinned."""
+    cfg, model, params = _setup()
+    rng = np.random.RandomState(seed)
+    eng = _engine(max_slots=3, num_pages=20)
+    shared = rng.randint(0, cfg.vocab_size, 16).tolist()   # 2 full pages
+    live_rids = []
+    for op in range(60):
+        choice = rng.rand()
+        if choice < 0.35:
+            # shared head -> prefix hits -> COW on the first write
+            tail = rng.randint(0, cfg.vocab_size,
+                               rng.randint(1, 6)).tolist()
+            prompt = shared + tail if rng.rand() < 0.6 else tail
+            r = eng.submit(prompt, int(rng.randint(1, 8)))
+            if r:
+                live_rids.append(int(r))
+        elif choice < 0.5 and live_rids:
+            eng.cancel(live_rids.pop(rng.randint(len(live_rids))))
+        elif choice < 0.6 and eng.allocator.free:
+            eng.allocator.hold_pages(int(rng.randint(1, 3)))
+        elif choice < 0.7:
+            eng.allocator.release_held()
+        else:
+            eng.step()
+        eng.allocator.check_consistency()
+    eng.allocator.release_held()
+    eng.run()
+    eng.allocator.check_consistency()
+    assert eng.trace_counts["decode"] == 1
+
+
+def test_cancel_releases_pages_exactly_like_finish():
+    """Two identical requests, one cancelled mid-flight and one run to
+    completion, leave identical allocator free/ref state."""
+    def run(kill: bool):
+        eng = _engine(max_slots=1, prefix_cache=False)
+        r = eng.submit([1, 2, 3, 4, 5], 8)
+        for _ in range(3):
+            eng.step()
+        if kill:
+            eng.cancel(int(r))
+        else:
+            eng.run()
+        eng.allocator.check_consistency()
+        return (sorted(eng.allocator.free),
+                eng.allocator.refs.tolist())
+    assert run(True) == run(False)
+
+
+# ---------------------------------------------------------------------------
+# drain -> restore
+# ---------------------------------------------------------------------------
+
+def test_drain_restore_bit_identical(tmp_path):
+    path = str(tmp_path / "serve.snap")
+
+    def make_engine(**over):
+        return _engine(**over)
+    out = verify_drain_restore(make_engine, seed=3, n=5, drain_after=2,
+                               vocab=_setup()[0].vocab_size, path=path)
+    assert out["requeued"]                         # something was pending
+
+
+def test_drain_rejects_new_submissions_and_snapshot_crc(tmp_path):
+    eng = _engine()
+    eng.submit([1, 2, 3], 4)
+    eng.submit([4, 5], 3)
+    path = str(tmp_path / "s.snap")
+    snap = eng.drain(path)
+    assert not eng.submit([9, 9], 2)               # draining: refused
+    # nothing was in flight: the queued work is snapshotted, not run
+    assert len(snap["queued"]) == 2 and snap["inflight"] == []
+    assert snap["finished"] == []
+    # corrupt one byte: restore must fail loudly
+    raw = bytearray(open(path, "rb").read())
+    raw[len(raw) // 2] ^= 0x40
+    bad = str(tmp_path / "bad.snap")
+    open(bad, "wb").write(bytes(raw))
+    fresh = _engine()
+    with pytest.raises((ValueError, KeyError)):
+        fresh.load_snapshot(bad)
+    ok = _engine()
+    ok.load_snapshot(path)
+    assert ok.sched.results() == eng.sched.results()
+    assert ok.sched._next_rid == eng.sched._next_rid
+
+
+def test_restore_preserves_rids_for_queued_work(tmp_path):
+    eng = _engine(max_slots=1)
+    a = eng.submit([1, 2, 3], 4)
+    b = eng.submit([4, 5, 6], 4)
+    eng.step()                                     # a in flight, b queued
+    snap = eng.drain(max_steps=0)                  # snapshot immediately
+    eng2 = _engine(max_slots=1)
+    requeued = eng2.load_snapshot(snap)
+    assert requeued == [int(a), int(b)]            # in-flight first
+    eng2.run()
+    reasons = eng2.sched.finish_reasons()
+    assert reasons[int(a)] == "stop" and reasons[int(b)] == "stop"
+
+
+# ---------------------------------------------------------------------------
+# chaos: serve fault kinds + bit-identical replay
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_serve_kinds_round_trip():
+    spec = "qflood:6@3,stall:8@6x4,cancel:1@9,pagepress:12@10x8"
+    plan = FaultPlan.from_spec(spec, seed=5)
+    assert plan.to_spec() == spec
+    assert all(e.kind in SERVE_KINDS for e in plan.events)
+    # training-side kinds are refused by the serve loop
+    bad = FaultPlan.from_spec("kill:0@1")
+    with pytest.raises(ValueError, match="training-side"):
+        run_chaos(lambda **kw: _engine(**kw), bad)
+
+
+def test_chaos_replay_bit_identical():
+    plan = FaultPlan.from_spec(
+        "qflood:4@2,stall:6@4x3,cancel:0@6,pagepress:8@5x4", seed=11)
+
+    def make_engine(**over):
+        return _engine(max_queue=8, shed_policy="reject-no-deadline",
+                       **over)
+    a, b = verify_replay(make_engine, plan, n_base=5, max_steps=120,
+                         vocab=_setup()[0].vocab_size, max_seq=64)
+    assert a["digest"] == b["digest"]
+    assert a["decode_compiles"] == 1
+    assert a["stats"]["finished_total"] == a["stats"]["submitted"] \
+        - a["stats"]["rejected_at_submit"]
+
+
+def test_chaos_virtual_clock_is_deterministic():
+    clock = VirtualClock()
+    assert clock() == 0.0
+    clock.advance(0.5)
+    assert clock() == 0.5
+    with pytest.raises(ValueError):
+        clock.advance(-1.0)
+
+
+# ---------------------------------------------------------------------------
+# the compile contract: guardrails change nothing inside jit
+# ---------------------------------------------------------------------------
+
+def _decode_hlo(eng):
+    tokens = jnp.zeros((eng.max_slots, 1), jnp.int32)
+    pos = jnp.zeros((eng.max_slots,), jnp.int32)
+    return eng._decode.jitted.lower(
+        eng.params, eng.pool, tokens, pos, jnp.asarray(eng._temps),
+        jnp.asarray(eng._top_ks), jnp.asarray(eng._top_ps), eng._keys,
+        eng._tables()).as_text()
+
+
+def _prefill_hlo(eng):
+    toks = jnp.zeros((1, eng.prefill_chunk), jnp.int32)
+    return eng._prefill.jitted.lower(
+        eng.params, eng.pool, toks, jnp.int32(0), jnp.int32(0),
+        jnp.int32(eng.prefill_chunk), eng._tables()).as_text()
+
+
+def test_jitted_programs_byte_identical_guardrails_on_off():
+    on = _engine(max_queue=4, watchdog_k=2.0, guardrails=True)
+    off = _engine(guardrails=False)
+    assert _decode_hlo(on) == _decode_hlo(off)
+    assert _prefill_hlo(on) == _prefill_hlo(off)
+
+
+def test_decode_compiles_once_under_guardrail_churn():
+    clock = VirtualClock()
+    eng = _engine(max_queue=4, clock=clock, cost_model=make_cost_model()[0])
+    rids = [eng.submit([i + 1, i + 2], 4,
+                       deadline_ms=(5.0 if i % 2 else None))
+            for i in range(6)]
+    eng.step()
+    clock.advance(1.0)                             # expire the deadlines
+    eng.run()
+    eng.cancel(next(int(r) for r in rids if r))
+    eng.submit([9, 8, 7], 3)
+    eng.run()
+    assert eng.trace_counts["decode"] == 1
+    assert eng.trace_counts["sample"] <= 2         # greedy paths only
+
+
+def test_guardrails_off_records_budgets_without_enforcing():
+    clock = VirtualClock()
+    eng = _engine(guardrails=False, clock=clock,
+                  cost_model=make_cost_model()[0])
+    r = eng.submit([1, 2, 3], 6, deadline_ms=1.0)
+    clock.advance(1.0)                             # way past budget
+    eng.run()
+    assert eng.sched.finish_reasons()[int(r)] == "stop"   # ran anyway
+    assert eng.stats.deadline_misses == 1          # ...and was measured
+    assert eng.stats.goodput_tokens == 0
